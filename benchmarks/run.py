@@ -1,0 +1,37 @@
+"""Benchmark driver. One section per paper table/figure plus kernel and
+end-to-end microbenchmarks. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+    print("name,us_per_call,derived")
+    # Paper tables are analytic (no wall time): emit as derived rows.
+    from repro.core.analytics import network_cost
+    from repro.models import cnn
+    for net, paper in paper_tables.PAPER_TABLE4.items():
+        convs, fcs = cnn.analytics_layers(net)
+        nc = network_cost(net, convs, fcs)
+        print(f"paper_table4/{net}_conv,{nc.conv_latency_s*1e6:.0f},"
+              f"eff={nc.conv_perf_efficiency:.3f};paper_ms={paper[0]};"
+              f"MA_MB={nc.conv_ma_bytes/1e6:.1f}")
+        print(f"paper_table4/{net}_fc,{nc.fc_latency_s*1e6:.0f},"
+              f"eff={nc.fc_perf_efficiency:.3f};paper_ms={paper[1]};"
+              f"MA_MB={nc.fc_ma_bytes/1e6:.1f}")
+    for net, filt, s, t in paper_tables.table2_rows():
+        print(f"paper_table2/{net}_{filt}_s{s},0,T={t}")
+    for filt, s, n_eff, p_eff in paper_tables.table3_rows():
+        print(f"paper_table3/{filt}_s{s},0,N_eff={n_eff};p_eff={p_eff}")
+
+    from benchmarks import kernel_bench
+    kernel_bench.run_all()
+
+    print("", file=sys.stderr)
+    print("full paper tables: PYTHONPATH=src python -m benchmarks.paper_tables",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Config system: model configs, input-shape cells, registry.
+
+Every assigned architecture is a `ModelConfig` in its own module under
+`repro.configs`; `get_config(name)` resolves it, `reduced(cfg)` derives the
+CPU smoke-test variant (same family/pattern, tiny dims). Input-shape cells
+(train_4k / prefill_32k / decode_32k / long_500k) are `ShapeCell`s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+# Layer kinds appearing in superblock patterns.
+GLOBAL_ATTN, LOCAL_ATTN, MAMBA, MLSTM, SLSTM, CROSS_ATTN = (
+    "global", "local", "mamba", "mlstm", "slstm", "cross")
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek multi-head latent attention dims."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba / xLSTM state-space dims."""
+    d_state: int = 16
+    d_conv: int = 4          # GFID 1-D conv mode: W_f=4, S=1, T=4
+    expand: int = 2
+    dt_rank: int = 0         # 0 -> ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    n_active: int = 0
+    d_ff_expert: int = 0
+    n_shared: int = 0
+    # which layers carry MoE FFN: every `period`-th starting at `first`.
+    period: int = 1
+    first: int = 0
+    router_noise: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | vlm | hybrid | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # layer pattern: repeated superblock + optional remainder
+    pattern: Tuple[str, ...] = (GLOBAL_ATTN,)
+    remainder: Tuple[str, ...] = ()
+    remainder_first: bool = False   # deepseek: 3 dense layers precede the scan
+    use_rope: bool = True           # jamba: no positional embedding
+    # attention details
+    window_size: int = 0            # sliding window for LOCAL_ATTN layers
+    rope_theta: float = 10000.0
+    rope_theta_local: float = 0.0   # gemma3: separate theta for local layers
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    logit_softcap: float = 0.0
+    attn_bias: bool = False
+    mla: Optional[MLAConfig] = None
+    # ffn
+    act: str = "silu"
+    gated_ffn: bool = True          # SwiGLU-style (False -> plain MLP)
+    moe: Optional[MoEConfig] = None
+    # ssm
+    ssm: Optional[SSMConfig] = None
+    # modality
+    is_encoder: bool = False        # hubert: bidirectional, no decode
+    n_img_tokens: int = 0           # vlm: image embedding count per sample
+    d_frontend: int = 0             # stub frontend embedding dim (0 = d_model)
+    # norm / embedding
+    norm_eps: float = 1e-6
+    scale_embed: bool = False       # gemma: embed * sqrt(d_model)
+    scale_plus_one_norm: bool = False  # gemma RMSNorm (1 + w)
+    tie_embeddings: bool = True
+    use_layer_norm: bool = False    # hubert uses LayerNorm
+    post_block_norm: bool = False   # gemma2/3 post-attn/ffn norms
+    # numerics / optimizer policy (DESIGN.md §6)
+    param_dtype: str = "bfloat16"
+    optimizer: str = "adamw"        # adamw | adafactor
+    # sharding policy knobs (parallel/sharding.py)
+    attn_shard: str = "heads"       # heads | seq (archs with odd head counts)
+    expert_shard: str = "data"      # mesh axis for the expert dim
+    # dry-run / serving
+    supports_decode: bool = True
+    subquadratic: bool = False      # eligible for long_500k
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        n_rep = (self.n_layers - len(self.remainder)) // len(self.pattern)
+        body = self.pattern * n_rep
+        kinds = (tuple(self.remainder) + body if self.remainder_first
+                 else body + tuple(self.remainder))
+        assert len(kinds) == self.n_layers, (len(kinds), self.n_layers)
+        return tuple(kinds)
+
+    @property
+    def n_groups(self) -> int:
+        return (self.n_layers - len(self.remainder)) // len(self.pattern)
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        return i >= self.moe.first and (i - self.moe.first) % self.moe.period == 0
+
+    @property
+    def d_head_total(self) -> int:
+        return self.n_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_NAMES = (
+    "gemma3_27b", "smollm_135m", "qwen3_32b", "gemma2_27b",
+    "granite_moe_1b", "deepseek_v3_671b", "xlstm_125m",
+    "llama32_vision_11b", "jamba15_large", "hubert_xlarge",
+)
+
+# CLI aliases (--arch ids from the assignment).
+ALIASES = {
+    "gemma3-27b": "gemma3_27b",
+    "smollm-135m": "smollm_135m",
+    "qwen3-32b": "qwen3_32b",
+    "gemma2-27b": "gemma2_27b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "xlstm-125m": "xlstm_125m",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "jamba-1.5-large-398b": "jamba15_large",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    name = ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def reduced(name: str) -> ModelConfig:
+    """CPU smoke-test variant of an arch: same family & pattern, tiny dims."""
+    name = ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.REDUCED
+
+
+def valid_cells(cfg: ModelConfig) -> Tuple[str, ...]:
+    """The (arch x shape) cells that are well-defined for this arch
+    (DESIGN.md §Arch-applicability)."""
+    cells = ["train_4k", "prefill_32k"]
+    if cfg.supports_decode and not cfg.is_encoder:
+        cells.append("decode_32k")
+        if cfg.subquadratic:
+            cells.append("long_500k")
+    return tuple(cells)

@@ -1,0 +1,38 @@
+"""deepseek-v3-671b — MLA + 256-expert top-8 MoE (1 shared), 61 layers.
+
+[arXiv:2412.19437] d_model=7168, 128 heads (MLA: q_lora 1536, kv_lora 512,
+nope 128, rope 64, v 128), expert d_ff=2048, first 3 layers dense
+(d_ff=18432), vocab=129280. MTP head omitted (documented in DESIGN.md).
+Optimizer: adafactor (factored second moment) — the only way fp-state fits
+512 x 16 GB (DESIGN.md §6).
+"""
+from repro.configs.base import (GLOBAL_ATTN, MLAConfig, ModelConfig,
+                                MoEConfig)
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, head_dim=128,
+    d_ff=18432, vocab_size=129280,
+    pattern=(GLOBAL_ATTN,), remainder=(GLOBAL_ATTN,) * 3,
+    remainder_first=True,
+    rope_theta=10_000.0,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, n_active=8, d_ff_expert=2048, n_shared=1,
+                  period=1, first=3),
+    tie_embeddings=False, optimizer="adafactor",
+)
+
+REDUCED = ModelConfig(
+    name="deepseek-reduced", family="moe",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=160, vocab_size=512,
+    pattern=(GLOBAL_ATTN,), remainder=(GLOBAL_ATTN,),
+    remainder_first=True,
+    rope_theta=10_000.0,
+    mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                  qk_rope_head_dim=8, v_head_dim=16),
+    moe=MoEConfig(n_experts=8, n_active=2, d_ff_expert=32, n_shared=1,
+                  period=1, first=1),
+    tie_embeddings=False,
+)

@@ -1,0 +1,29 @@
+"""hubert-xlarge — encoder-only audio transformer (wav2vec2 backbone).
+
+[arXiv:2106.07447] 48L d_model=1280 16H d_ff=5120 vocab=504 (masked-frame
+cluster prediction). The waveform conv feature extractor is a STUB per the
+assignment: `input_specs()` provides frame embeddings (B, S, 512); the
+in-projection and the GFID depthwise conv positional embedding (W_f=128)
+are part of the model. Encoder-only: no decode cells.
+"""
+from repro.configs.base import GLOBAL_ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504,
+    pattern=(GLOBAL_ATTN,), use_rope=False,
+    act="gelu", gated_ffn=False, use_layer_norm=True, norm_eps=1e-5,
+    is_encoder=True, d_frontend=512, tie_embeddings=False,
+    supports_decode=False,
+)
+
+REDUCED = ModelConfig(
+    name="hubert-reduced", family="audio",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=64,
+    pattern=(GLOBAL_ATTN,), use_rope=False,
+    act="gelu", gated_ffn=False, use_layer_norm=True, norm_eps=1e-5,
+    is_encoder=True, d_frontend=32, tie_embeddings=False,
+    supports_decode=False,
+)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: the GFID dataflow (gfid.py), its analytic
+# performance model (analytics.py, Eqs 8-18), the mode table (modes.py) and
+# the multi-mode engine (engine.py) that routes every dense op in the repo —
+# conv and FC alike — through one execution contract.
+from repro.core.engine import EngineConfig, MultiModeEngine, default_engine  # noqa: F401
+from repro.core.modes import Mode, fc_mode, paper_mode, pes_per_tile  # noqa: F401

@@ -1,0 +1,213 @@
+"""Analytic FLOP / byte model per (arch x shape cell) — the napkin-math side
+of the roofline (EXPERIMENTS.md §Roofline).
+
+XLA's cost analysis counts while-loop bodies once (our models are scans all
+the way down), so the compiled numbers undercount; this module computes the
+exact matmul-level FLOPs from the config, the way an accelerator architect
+would on paper. Conventions:
+
+  * 1 MAC = 2 FLOPs; only >=O(d^2) terms counted (norms/gates/rope are
+    O(d) and contribute <1%).
+  * train FLOPs = fwd x (1 [fwd] + 2 [bwd] + 1 [full-block remat refwd]).
+  * causal attention scores count S/2 average context; decode counts the
+    true cache length; sliding-window layers count min(ctx, window).
+  * MoE counts the *capacity-padded* expert GEMMs (cf x k copies/token) —
+    the dispatch waste is visible as MODEL_FLOPS/HLO ratio < 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import (CROSS_ATTN, GLOBAL_ATTN, LOCAL_ATTN, MAMBA,
+                                MLSTM, SLSTM, ModelConfig, SHAPES)
+
+
+def _attn_proj_flops(cfg: ModelConfig, kind: str) -> float:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None and kind != CROSS_ATTN:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        fl = (d * m.q_lora_rank + m.q_lora_rank * h * qk           # q path
+              + d * (m.kv_lora_rank + m.qk_rope_head_dim)          # kv down
+              + m.kv_lora_rank * h * m.qk_nope_head_dim            # k up
+              + m.kv_lora_rank * h * m.v_head_dim                  # v up
+              + h * m.v_head_dim * d)                              # o
+        return 2.0 * fl
+    return 2.0 * (d * h * hd + 2 * d * kv * hd + h * hd * d)
+
+
+def _attn_score_flops(cfg: ModelConfig, kind: str, ctx: float) -> float:
+    """Score+value FLOPs per token given average context length."""
+    if kind == LOCAL_ATTN and cfg.window_size:
+        ctx = min(ctx, cfg.window_size)
+    h = cfg.n_heads
+    if cfg.mla is not None and kind != CROSS_ATTN:
+        m = cfg.mla
+        dk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        dv = m.v_head_dim
+    else:
+        dk = dv = cfg.head_dim
+    return 2.0 * h * ctx * (dk + dv)
+
+
+def _ffn_flops(cfg: ModelConfig, use_moe: bool) -> float:
+    d = cfg.d_model
+    if use_moe:
+        mc = cfg.moe
+        mats = 3 if cfg.gated_ffn else 2
+        per_expert = mats * d * mc.d_ff_expert
+        active = mc.n_active * per_expert
+        shared = mc.n_shared * per_expert
+        router = d * mc.n_experts
+        return 2.0 * (active + shared + router)
+    mats = 3 if cfg.gated_ffn else 2
+    return 2.0 * mats * d * cfg.d_ff
+
+
+def _ssm_flops(cfg: ModelConfig, kind: str) -> float:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ds = cfg.ssm.d_state
+    dr = cfg.ssm.dt_rank or -(-d // 16)
+    if kind == MAMBA:
+        fl = (d * 2 * di + cfg.ssm.d_conv * di + di * (dr + 2 * ds)
+              + dr * di + 3 * di * ds + di * d)
+        return 2.0 * fl
+    if kind == MLSTM:
+        # up, conv, qkv, gates, down + matrix-memory update/read (dh^2/head)
+        dh = di // cfg.n_heads
+        core = cfg.n_heads * 2 * dh * dh           # C update + C read
+        fl = (d * 2 * di + cfg.ssm.d_conv * di + 3 * di * di
+              + di * 2 * cfg.n_heads + core + di * d)
+        return 2.0 * fl
+    # sLSTM: gates + block-diagonal recurrence + 4/3 gated MLP
+    dh = d // cfg.n_heads
+    dff = int(d * 4 / 3 / 64) * 64 * 2 or 2 * d
+    fl = (cfg.ssm.d_conv * d + d * 4 * d + cfg.n_heads * dh * 4 * dh
+          + d * dff + (dff // 2) * d)
+    return 2.0 * fl
+
+
+def fwd_flops_per_token(cfg: ModelConfig, ctx: float) -> float:
+    """Forward FLOPs for ONE token with average attention context `ctx`."""
+    total = 0.0
+    for i, kind in enumerate(cfg.layer_kinds):
+        use_moe = cfg.is_moe_layer(i)
+        if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
+            total += _attn_proj_flops(cfg, kind)
+            c = cfg.n_img_tokens if kind == CROSS_ATTN else ctx
+            total += _attn_score_flops(cfg, kind, c)
+            if (cfg.d_ff > 0) or use_moe:
+                total += _ffn_flops(cfg, use_moe)
+        elif kind in (MAMBA, MLSTM, SLSTM):
+            total += _ssm_flops(cfg, kind)
+            if kind == MAMBA and (cfg.d_ff > 0 or use_moe):
+                total += _ffn_flops(cfg, use_moe)
+    total += 2.0 * cfg.d_model * cfg.vocab_size        # logits
+    return total
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """N_active — per-token parameter count (MoE counts routed+shared)."""
+    per_tok = fwd_flops_per_token(cfg, ctx=0.0) / 2.0  # drop attention ctx
+    return per_tok
+
+
+@dataclasses.dataclass(frozen=True)
+class CellFlops:
+    fwd_total: float          # whole-cell forward FLOPs (global)
+    cell_total: float         # train: x4 (fwd+bwd+remat); else fwd
+    model_flops: float        # 6*N_active*tokens (train) / 2*N_active*tokens
+    tokens: float
+
+
+def cell_flops(cfg: ModelConfig, cell_name: str,
+               capacity_factor: float = 1.25) -> CellFlops:
+    cell = SHAPES[cell_name]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        ctx = cell.seq_len / 2
+        fwd = fwd_flops_per_token(cfg, ctx) * tokens
+        if cfg.moe:  # capacity padding executes cf x the routed GEMMs
+            fwd += (capacity_factor - 1.0) * 0  # waste is padding, not flops
+        total = 4.0 * fwd
+        model = 6.0 * active_params(cfg) * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        ctx = cell.seq_len / 2
+        fwd = fwd_flops_per_token(cfg, ctx) * tokens
+        total = fwd
+        model = 2.0 * active_params(cfg) * tokens
+    else:  # decode: one token against a seq_len cache
+        tokens = cell.global_batch
+        ctx = cell.seq_len
+        fwd = fwd_flops_per_token(cfg, ctx) * tokens
+        total = fwd
+        model = 2.0 * active_params(cfg) * tokens
+    return CellFlops(fwd_total=fwd, cell_total=total, model_flops=model,
+                     tokens=tokens)
+
+
+# -- analytic per-device byte traffic ----------------------------------------
+
+def param_bytes(cfg: ModelConfig) -> float:
+    from repro.models.layers import count_params
+    from repro.models.transformer import model_defs
+    return count_params(model_defs(cfg)) * 2.0          # bf16
+
+
+def cell_bytes_per_device(cfg: ModelConfig, cell_name: str,
+                          n_devices: int) -> Dict[str, float]:
+    """HBM traffic per device (analytic): weights + activations + states."""
+    cell = SHAPES[cell_name]
+    pb = param_bytes(cfg) / n_devices                   # fully sharded storage
+    d = cfg.d_model
+    L = cfg.n_layers
+    if cell.kind == "train":
+        tokens_dev = cell.global_batch * cell.seq_len / n_devices
+        # weights: fwd read + bwd read + grad write (bf16) + opt (fp32 m,v
+        # read+write for adamw; adafactor ~0)
+        opt = 16.0 if cfg.optimizer == "adamw" else 1.0
+        weight_traffic = pb * (3.0 + opt / 2.0)
+        act = 2.0 * tokens_dev * d * L * 2.0 * 3.0      # resid r/w fwd+bwd+remat
+        return {"weights": weight_traffic, "activations": act,
+                "state": 0.0}
+    if cell.kind == "prefill":
+        tokens_dev = cell.global_batch * cell.seq_len / n_devices
+        act = 2.0 * tokens_dev * d * L * 2.0
+        cache = _state_bytes(cfg, cell) / n_devices
+        return {"weights": pb, "activations": act, "state": cache}
+    # decode: read all (sharded) weights + the whole cache for 1 token
+    cache = _state_bytes(cfg, cell) / n_devices
+    tokens_dev = cell.global_batch / n_devices
+    act = 2.0 * tokens_dev * d * L * 2.0
+    return {"weights": pb, "activations": act, "state": cache}
+
+
+def _state_bytes(cfg: ModelConfig, cell) -> float:
+    """Global decode-state bytes for a cache of cell.seq_len."""
+    b, s = cell.global_batch, cell.seq_len
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in (GLOBAL_ATTN, LOCAL_ATTN):
+            eff = min(s, cfg.window_size) if (
+                kind == LOCAL_ATTN and cfg.window_size) else s
+            if cfg.mla is not None:
+                m = cfg.mla
+                total += b * s * (m.kv_lora_rank + m.qk_rope_head_dim) * 2
+            else:
+                total += 2 * b * eff * cfg.n_kv_heads * cfg.head_dim * 2
+        elif kind == CROSS_ATTN:
+            total += 2 * b * cfg.n_img_tokens * cfg.n_kv_heads \
+                * cfg.head_dim * 2
+        elif kind == MAMBA:
+            di = cfg.ssm.expand * cfg.d_model
+            total += b * di * cfg.ssm.d_state * 4 + b * 3 * di * 2
+        elif kind == MLSTM:
+            di = cfg.ssm.expand * cfg.d_model
+            dh = di // cfg.n_heads
+            total += b * cfg.n_heads * dh * dh * 4
+        elif kind == SLSTM:
+            total += 4 * b * cfg.d_model * 4
+    return total

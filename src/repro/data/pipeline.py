@@ -1,0 +1,101 @@
+"""Deterministic, shardable data pipeline.
+
+Design for 1000+ nodes (DESIGN.md §4):
+  * every batch is a pure function of (seed, step, shard_index) — a
+    re-scheduled or replacement host regenerates exactly its shard with no
+    coordination (straggler / elastic-restart friendly);
+  * sources: synthetic LM streams (zipf-mixture with induced n-gram
+    structure so loss curves are meaningful) and a memory-mapped token-file
+    source for real corpora;
+  * outputs already carry the (batch, seq) layout the sharding rules expect.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1               # data-parallel host groups
+    token_file: Optional[str] = None  # memmap .bin of uint16/uint32 tokens
+    vocab_size: int = 32000
+
+
+def _rng_for(cfg: DataConfig, step: int, shard: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, shard]))
+
+
+def synthetic_tokens(cfg: DataConfig, step: int, shard: int) -> np.ndarray:
+    """Zipf-distributed tokens with planted bigram structure: token t+1 is
+    with p=0.5 a deterministic function of token t — learnable signal."""
+    rng = _rng_for(cfg, step, shard)
+    b = cfg.global_batch // cfg.n_shards
+    v = cfg.vocab_size
+    base = rng.zipf(1.3, size=(b, cfg.seq_len)).astype(np.int64) % v
+    follow = (base * 2654435761 + 12345) % v
+    pick = rng.random((b, cfg.seq_len)) < 0.5
+    out = base.copy()
+    out[:, 1:] = np.where(pick[:, 1:], follow[:, :-1], base[:, 1:])
+    return out.astype(np.int32)
+
+
+class MemmapSource:
+    """Flat token file -> deterministic random windows."""
+
+    def __init__(self, path: str, dtype=np.uint16):
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+
+    def sample(self, cfg: DataConfig, step: int, shard: int) -> np.ndarray:
+        rng = _rng_for(cfg, step, shard)
+        b = cfg.global_batch // cfg.n_shards
+        n = len(self.tokens) - cfg.seq_len - 1
+        starts = rng.integers(0, n, size=b)
+        return np.stack([np.asarray(
+            self.tokens[s:s + cfg.seq_len + 1]) for s in starts]
+        ).astype(np.int32)
+
+
+def lm_batch(model_cfg: ModelConfig, cfg: DataConfig, step: int,
+             shard: int = 0, source: Optional[MemmapSource] = None) -> Dict:
+    """Next-token LM batch: {tokens, labels} (+ modality stubs)."""
+    if source is not None:
+        window = source.sample(cfg, step, shard)
+        tokens, labels = window[:, :-1], window[:, 1:]
+    else:
+        tokens = synthetic_tokens(cfg, step, shard)
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = 0
+    batch = {"tokens": tokens, "labels": labels}
+    b = tokens.shape[0]
+    rng = _rng_for(cfg, step, shard + 1_000_003)
+    if model_cfg.family == "audio":
+        frames = rng.standard_normal(
+            (b, cfg.seq_len, model_cfg.d_frontend)).astype(np.float32)
+        mask = rng.random((b, cfg.seq_len)) < 0.35     # HuBERT-style masking
+        batch = {"frames": frames,
+                 "labels": (labels % model_cfg.vocab_size),
+                 "loss_mask": mask}
+    if model_cfg.n_img_tokens:
+        batch["image_embeds"] = rng.standard_normal(
+            (b, model_cfg.n_img_tokens, model_cfg.d_model)
+        ).astype(np.float32) * 0.02
+    return batch
+
+
+def batches(model_cfg: ModelConfig, cfg: DataConfig, start_step: int = 0,
+            shard: int = 0) -> Iterator[Dict]:
+    source = MemmapSource(cfg.token_file) if cfg.token_file else None
+    step = start_step
+    while True:
+        yield lm_batch(model_cfg, cfg, step, shard, source)
+        step += 1

@@ -1,0 +1,52 @@
+"""Depthwise causal conv1d Pallas kernel — the GFID 1-D mode (W_f = 4,
+S = 1, T = 4) used by Mamba / xLSTM short convolutions and the hubert
+positional conv (W_f = 128).
+
+Pure VPU work (no C_in reduction): the padded sequence block sits in VMEM
+and the W_f taps accumulate shifted element-wise products — Table 1 of the
+paper with one independent GFID row per channel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, w_f: int, l_out: int):
+    xv = x_ref[0]                              # (L + W_f - 1, D_blk)
+    wv = w_ref[...]                            # (W_f, D_blk)
+    acc = jnp.zeros((l_out, xv.shape[1]), jnp.float32)
+    for i in range(w_f):
+        acc += xv[i:i + l_out].astype(jnp.float32) \
+            * wv[i].astype(jnp.float32)
+    o_ref[0] = acc
+
+
+def gfid_conv1d_depthwise(x: jax.Array, w: jax.Array, *,
+                          causal: bool = True, d_block: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """x: (B, L, D); w: (W_f, D). Returns (B, L, D) fp32."""
+    b, l, d = x.shape
+    w_f = w.shape[0]
+    if causal:
+        xp = jnp.pad(x, ((0, 0), (w_f - 1, 0), (0, 0)))
+    else:
+        lpad = (w_f - 1) // 2
+        xp = jnp.pad(x, ((0, 0), (lpad, w_f - 1 - lpad), (0, 0)))
+    db = min(d_block, d)
+    if d % db:
+        db = d
+    grid = (b, d // db)
+    return pl.pallas_call(
+        functools.partial(_kernel, w_f=w_f, l_out=l),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, l + w_f - 1, db),
+                               lambda bi, di: (bi, 0, di)),
+                  pl.BlockSpec((w_f, db), lambda bi, di: (0, di))],
+        out_specs=pl.BlockSpec((1, l, db), lambda bi, di: (bi, 0, di)),
+        out_shape=jax.ShapeDtypeStruct((b, l, d), jnp.float32),
+        interpret=interpret,
+    )(xp, w)

@@ -1,0 +1,92 @@
+"""Flash attention (online softmax) Pallas kernel — beyond-paper hot-spot
+kernel for the transformer archs (prefill_32k is the memory-bound cell).
+
+Grid (B, H, n_q, n_kv), kv innermost; the (m, l, acc) running statistics
+live in VMEM scratch and the (BQ, BK) score tile never leaves VMEM — the
+same "never materialize the big intermediate" discipline the GFID matrix
+brings to convolution.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int, n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 512, bk: int = 512,
+                    scale=None, interpret: bool = False) -> jax.Array:
+    """q, k, v: (B, H, S, D) (broadcast GQA heads before calling).
+    Returns (B, H, Sq, D) in q.dtype."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    if sq % bq:
+        bq = math.gcd(bq, sq)
+    if skv % bk:
+        bk = math.gcd(bk, skv)
+    n_q, n_kv = sq // bq, skv // bk
+    grid = (b, h, n_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

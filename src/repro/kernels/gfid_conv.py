@@ -1,0 +1,75 @@
+"""GFID convolution as a Pallas TPU kernel.
+
+The TPU-native lowering of the paper's dataflow (DESIGN.md §2): one output
+row per grid step (the paper's 1-D tile sweep, N_eff = W_out), the input
+row resident in VMEM and read from HBM exactly once per (C_out tile), the
+filter taps looping from VMEM registers (the weight-generator analogue),
+and the W_f shifted GEMM accumulations hitting the MXU with fp32
+accumulation (the 24-bit partial-sum scratchpad analogue).
+
+Grid: (B, H_out, n_cout, H_f, n_cin) — the two innermost dims revisit the
+same output block consecutively, accumulating in place, exactly like the
+paper's PEs accumulate C_in x H_f partial products per output pixel
+(§4: "this procedure is repeated H_f x C_in times").
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, w_f: int, stride: int, w_out: int):
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xv = x_ref[0, 0]                          # (W_in_pad, C_in_blk) VMEM
+    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.float32)
+    for i in range(w_f):                      # the W_f weight-register loop
+        xs = jax.lax.slice(xv, (i, 0),
+                           (i + (w_out - 1) * stride + 1, xv.shape[1]),
+                           (stride, 1))
+        acc += jnp.dot(xs, w_ref[0, i],
+                       preferred_element_type=jnp.float32)
+    o_ref[0, 0] += acc
+
+
+def gfid_conv2d_nhwc(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                     c_in_block: int = 512, c_out_block: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """Valid conv (pad outside). x: (B, H_in, W_in, C_in) already padded;
+    w: (H_f, W_f, C_in, C_out). Returns (B, H_out, W_out, C_out) fp32."""
+    b, h_in, w_in, c_in = x.shape
+    h_f, w_f, _, c_out = w.shape
+    h_out = (h_in - h_f) // stride + 1
+    w_out = (w_in - w_f) // stride + 1
+
+    cib = min(c_in_block, c_in)
+    cob = min(c_out_block, c_out)
+    if c_in % cib or c_out % cob:
+        # fall back to whole-channel blocks for ragged channel counts
+        cib, cob = c_in, c_out
+    n_ci, n_co = c_in // cib, c_out // cob
+
+    grid = (b, h_out, n_co, h_f, n_ci)
+    return pl.pallas_call(
+        functools.partial(_kernel, w_f=w_f, stride=stride, w_out=w_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, w_in, cib),
+                         lambda bi, z, co, j, k: (bi, z * stride + j, 0, k)),
+            pl.BlockSpec((1, w_f, cib, cob),
+                         lambda bi, z, co, j, k: (j, 0, k, co)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out, cob),
+                               lambda bi, z, co, j, k: (bi, z, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, c_out), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,54 @@
+"""FC mode of the multi-mode engine: blocked GEMM Pallas kernel.
+
+The W_f = 1 degenerate mode (paper §4.1.6, UF = 100%): same engine, no
+shifted accumulation, MXU-aligned (128-multiple) tiles, fp32 accumulator in
+VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def gfid_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bk: int = 512,
+                bn: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N) fp32."""
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    if m % bm or k % bk or n % bn:
+        # pad to block multiples (MXU tile quantization — the engine's
+        # occupancy loss, reported by core.analytics.mxu_occupancy)
+        mp = -(-m // bm) * bm
+        kp = -(-k // bk) * bk
+        np_ = -(-n // bn) * bn
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+        out = gfid_matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
+        return out[:m, :n]
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,69 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On this CPU container every kernel runs with interpret=True (the kernel
+body executes in Python, validating the BlockSpec tiling and accumulation
+logic); on TPU the same calls compile to Mosaic. The wrappers add padding,
+grouping, batching and dtype plumbing so callers see the same contract as
+the pure-jnp references in ref.py / core.gfid.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv1d as _conv1d
+from repro.kernels import flash_attention as _flash
+from repro.kernels import gfid_conv as _conv
+from repro.kernels import gfid_matmul as _matmul
+
+
+def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
+                groups: int = 1, interpret: bool = True) -> jax.Array:
+    """NHWC x HWIO conv through the multi-mode engine's conv mode."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    if groups == 1:
+        out = _conv.gfid_conv2d_nhwc(x, w, stride=stride, interpret=interpret)
+        return out.astype(x.dtype)
+    cg = x.shape[-1] // groups
+    og = w.shape[-1] // groups
+    outs = []
+    for g in range(groups):
+        outs.append(_conv.gfid_conv2d_nhwc(
+            x[..., g * cg:(g + 1) * cg],
+            w[..., g * og:(g + 1) * og],
+            stride=stride, interpret=interpret))
+    return jnp.concatenate(outs, axis=-1).astype(x.dtype)
+
+
+def gfid_matmul(x: jax.Array, w: jax.Array, *,
+                interpret: bool = True) -> jax.Array:
+    """(..., K) @ (K, N) through the FC mode."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _matmul.gfid_matmul(x2, w, interpret=interpret)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def gfid_conv1d_depthwise(x: jax.Array, w: jax.Array, *, causal: bool = True,
+                          interpret: bool = True) -> jax.Array:
+    return _conv1d.gfid_conv1d_depthwise(
+        x, w, causal=causal, interpret=interpret).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) — GQA broadcast inside.
+    Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+    out = _flash.flash_attention(qt, kt, vt, causal=causal, scale=scale,
+                                 interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

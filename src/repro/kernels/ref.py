@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+per-kernel allclose sweeps in tests/test_kernels.py assert against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gfid
+
+
+def conv2d_ref(x, w, stride: int = 1, pad: int = 0, groups: int = 1):
+    """NHWC x HWIO -> NHWC, fp32 accumulation (XLA direct conv)."""
+    return gfid.conv2d_reference(x, w, stride, pad, groups)
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv1d_depthwise_ref(x, w, causal: bool = True):
+    return gfid.conv1d_depthwise_gfid(x, w, causal=causal)
+
+
+def attention_ref(q, k, v, causal: bool = True, scale=None):
+    """q,k,v: (B, H, S, D) (kv heads pre-broadcast)."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), bool))
+        s_mat = jnp.where(mask, s_mat, -1e30)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell against ShapeDtypeStruct inputs on the production meshes, and record
+memory_analysis / cost_analysis / per-collective byte counts for the
+roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_NAMES, SHAPES, get_config, valid_cells)
+from repro.launch import hloparse
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_mod
+from repro.models import transformer as T
+from repro.parallel import sharding as S
+from repro.serve import engine as serve_engine
+from repro.train import step as train_step_mod
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TYPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|"
+                      r"u32|u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+          "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+          "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def parse_collective_bytes(hlo: str):
+    """Sum output-operand bytes of every collective op (per-device, since
+    the post-SPMD module is per-partition)."""
+    per_kind = {k: 0 for k in COLLECTIVES}
+    count = {k: 0 for k in COLLECTIVES}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"^[%\w.\-]+\s*=\s*(.*?)\s*(all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done(" in ls:      # avoid double counting async pairs
+            continue
+        out_types = m.group(1)
+        total = sum(_shape_bytes(t, d)
+                    for t, d in _TYPE_RE.findall(out_types))
+        per_kind[kind] += total
+        count[kind] += 1
+    return per_kind, count
+
+
+def _accum_for(cfg, cell_name: str) -> int:
+    # microbatching for the very large archs (activation memory; DESIGN §4,
+    # EXPERIMENTS §Perf iterations 1-3 and the it7 accum tradeoff)
+    if cell_name == "train_4k" and cfg.d_model >= 7168:
+        return 4
+    return 1
+
+
+def lower_cell(arch: str, cell_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = S.make_rules(mesh)
+    t0 = time.time()
+
+    if cell.kind == "train":
+        hyper = train_step_mod.TrainHyper(accum=_accum_for(cfg, cell_name))
+        ts, contract = train_step_mod.build_train_step(cfg, mesh, rules,
+                                                       hyper)
+        params_sh = T.param_shapes(cfg)
+        opt_sh = jax.eval_shape(contract["opt_init"], params_sh)
+        batch_sh = specs_mod.input_specs(cfg, cell_name)
+        jitted = train_step_mod.jit_train_step(cfg, mesh, ts, contract,
+                                               batch_sh)
+        with mesh:
+            lowered = jitted.lower(params_sh, opt_sh, batch_sh,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+    elif cell.kind == "prefill":
+        fn, contract = serve_engine.build_prefill(
+            cfg, mesh, cell.global_batch, cell.seq_len,
+            max_len=cell.seq_len + 128, rules=rules)
+        batch_sh = specs_mod.input_specs(cfg, cell_name)
+        jitted = contract["jit_for"](batch_sh)
+        params_sh = T.param_shapes(cfg)
+        with mesh:
+            lowered = jitted.lower(params_sh, batch_sh)
+    else:  # decode
+        jitted, contract = serve_engine.build_serve_step(
+            cfg, mesh, cell.global_batch, cell.seq_len, rules=rules)
+        params_sh = T.param_shapes(cfg)
+        state_sh = contract["state_shapes"]
+        tok = specs_mod.input_specs(cfg, cell_name)
+        with mesh:
+            lowered = jitted.lower(params_sh, state_sh, tok["tokens"],
+                                   tok["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_raw, _ = parse_collective_bytes(hlo)       # body-once (raw)
+    coll, coll_count = hloparse.collective_bytes(hlo)  # trip-corrected
+
+    result = {
+        "arch": arch, "shape": cell_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collective_bytes": coll,
+        "collective_bytes_raw": coll_raw,
+        "collective_count": coll_count,
+        "hlo_lines": hlo.count("\n"),
+    }
+    return result
+
+
+def cell_list(multi: bool):
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for cell in valid_cells(cfg):
+            yield arch, cell, multi
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        cells = []
+        if not args.multi_pod_only:
+            cells += list(cell_list(False))
+        if not args.single_pod_only:
+            cells += list(cell_list(True))
+    else:
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    n_ok = n_fail = 0
+    for arch, cell, multi in cells:
+        mesh_tag = "2x16x16" if multi else "16x16"
+        out = OUT_DIR / f"{arch}__{cell}__{mesh_tag}.json"
+        if args.skip_existing and out.exists():
+            print(f"SKIP {arch} {cell} {mesh_tag} (exists)", flush=True)
+            n_ok += 1
+            continue
+        try:
+            res = lower_cell(arch, cell, multi)
+            out.write_text(json.dumps(res, indent=1))
+            pk = res["memory"]["peak_bytes"]
+            print(f"OK   {arch:22s} {cell:12s} {mesh_tag:8s} "
+                  f"compile={res['compile_s']:7.1f}s "
+                  f"flops={res['cost']['flops']:.3e} "
+                  f"peak={pk/2**30 if pk else -1:.2f}GiB", flush=True)
+            n_ok += 1
+        except Exception as e:  # noqa: BLE001 — record and continue
+            n_fail += 1
+            err = {"arch": arch, "shape": cell, "mesh": mesh_tag,
+                   "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+            (OUT_DIR / f"FAIL__{arch}__{cell}__{mesh_tag}.json").write_text(
+                json.dumps(err, indent=1))
+            print(f"FAIL {arch:22s} {cell:12s} {mesh_tag:8s} {e!r}"[:300],
+                  flush=True)
+    print(f"done: {n_ok} ok, {n_fail} failed", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,133 @@
+"""Post-optimization HLO parsing: per-collective byte counts with while-loop
+trip-count attribution.
+
+XLA's HloCostAnalysis (and a naive text scan) counts a while-loop body
+exactly once, but our models scan over layer groups / CE vocab chunks /
+flash chunks — so collectives inside scans must be multiplied by their trip
+counts. We split the module into computations, find each `while`'s
+condition/body, infer the trip count from the `compare(iter, constant)` in
+the condition, and accumulate recursively (nested scans multiply).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TYPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|"
+                      r"u32|u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+          "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8,
+          "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) (?:\([^)]*\))?\s*->.*{?\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\)")
+_CALLEE_RE = re.compile(r"(?:condition|body|to_apply)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and ("{" in line) and ("->" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", line.strip())
+            if m:
+                cur_name = m.group(1)
+                cur_lines = []
+                continue
+        if line.startswith("}"):
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+def _line_collective(ls: str):
+    m = re.match(r"^[%\w.\-]+\s*=\s*(.*?)\s*(all-gather|all-reduce|"
+                 r"reduce-scatter|all-to-all|collective-permute)"
+                 r"(-start)?\(", ls)
+    if not m:
+        return None
+    if "-done(" in ls:
+        return None
+    kind = m.group(2)
+    total = sum(_shape_bytes(t, d) for t, d in _TYPE_RE.findall(m.group(1)))
+    return kind, total
+
+
+def _trip_count(cond_text: str) -> int:
+    """Largest integer constant in the while condition (scan canonical form
+    compares the induction variable against the trip count)."""
+    vals = [int(v) for v in _CONST_RE.findall(cond_text)]
+    return max(vals) if vals else 1
+
+
+def collective_bytes(hlo: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Per-device collective bytes with trip-count attribution.
+
+    Returns (bytes_per_kind, op_count_per_kind) where counts are dynamic
+    (trip-multiplied) instances.
+    """
+    comps = split_computations(hlo)
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+        if entry is None:
+            return ({k: 0 for k in COLLECTIVES},
+                    {k: 0 for k in COLLECTIVES})
+
+    memo: Dict[str, Tuple[Dict[str, int], Dict[str, int]]] = {}
+
+    def walk(name: str, stack=()) -> Tuple[Dict[str, int], Dict[str, int]]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return ({k: 0 for k in COLLECTIVES}, {k: 0 for k in COLLECTIVES})
+        by = {k: 0 for k in COLLECTIVES}
+        cnt = {k: 0 for k in COLLECTIVES}
+        for line in comps[name].splitlines():
+            ls = line.strip()
+            got = _line_collective(ls)
+            if got:
+                by[got[0]] += got[1]
+                cnt[got[0]] += 1
+            if " while(" in ls or ls.startswith("while("):
+                callees = dict(
+                    re.findall(r"(condition|body)=%?([\w\.\-]+)", ls))
+                body = callees.get("body")
+                cond = callees.get("condition")
+                if body:
+                    trips = _trip_count(comps.get(cond, ""))
+                    b2, c2 = walk(body, stack + (name,))
+                    for k in COLLECTIVES:
+                        by[k] += trips * b2[k]
+                        cnt[k] += trips * c2[k]
+            else:
+                for callee in _CALLEE_RE.findall(ls):
+                    if callee in comps and callee != name:
+                        b2, c2 = walk(callee, stack + (name,))
+                        for k in COLLECTIVES:
+                            by[k] += b2[k]
+                            cnt[k] += c2[k]
+        memo[name] = (by, cnt)
+        return memo[name]
+
+    return walk(entry)

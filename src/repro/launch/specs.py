@@ -1,0 +1,55 @@
+"""`input_specs()` — ShapeDtypeStruct stand-ins for every model input, per
+(arch x shape cell). Weak-type-correct, shardable, zero allocation: the
+multi-pod dry-run lowers against exactly these.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell, SHAPES
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.family == "audio":
+        return {"frames": _sds((b, s, cfg.d_frontend), jnp.bfloat16),
+                "labels": _sds((b, s), jnp.int32),
+                "loss_mask": _sds((b, s), jnp.bool_)}
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "labels": _sds((b, s), jnp.int32)}
+    if cfg.n_img_tokens:
+        batch["image_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.family == "audio":
+        return {"frames": _sds((b, s, cfg.d_frontend), jnp.bfloat16)}
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.n_img_tokens:
+        batch["image_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def decode_token_specs(cell: ShapeCell) -> Dict:
+    return {"tokens": _sds((cell.global_batch, 1), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, cell_name: str) -> Dict:
+    cell = SHAPES[cell_name]
+    if cell.kind == "train":
+        return train_batch_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_batch_specs(cfg, cell)
+    return decode_token_specs(cell)

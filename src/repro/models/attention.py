@@ -1,0 +1,408 @@
+"""Attention family: GQA (global / sliding-window), qk-norm, softcap, MLA
+(DeepSeek latent attention) and VLM cross-attention — with separate
+full-sequence (train / prefill) and single-token (decode) paths.
+
+All projections are FC-mode GEMMs of the multi-mode engine; the score/value
+contraction uses a chunked online-softmax (flash-style) formulation so no
+(S x S) score matrix is ever materialized — required for prefill_32k and the
+memory term of the roofline. `repro.kernels.flash_attention` is the Pallas
+TPU version of the same contraction (validated against `ref.py`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MLAConfig, CROSS_ATTN, LOCAL_ATTN
+from repro.models.flash import flash_attention_jnp
+from repro.models.layers import (
+    D_FF, D_MODEL, HEADS, HEAD_DIM, IMG, KV_HEADS, SEQ, ParamDef, apply_rope,
+    rms_norm, softcap)
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig, kind: str) -> Dict[str, ParamDef]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None and kind != CROSS_ATTN:
+        return mla_defs(cfg)
+    defs = {
+        "wq": ParamDef((d, h * hd), (D_MODEL, HEADS)),
+        "wk": ParamDef((d, kv * hd), (D_MODEL, None)),
+        "wv": ParamDef((d, kv * hd), (D_MODEL, None)),
+        "wo": ParamDef((h * hd, d), (HEADS, D_MODEL)),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), "ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), "ones")
+    if kind == CROSS_ATTN:
+        dv = cfg.d_frontend or cfg.d_model
+        defs["wk"] = ParamDef((dv, kv * hd), (D_MODEL, None))
+        defs["wv"] = ParamDef((dv, kv * hd), (D_MODEL, None))
+        defs["gate"] = ParamDef((1,), (None,), "zeros")   # tanh-gated residual
+        defs["k_norm_cross"] = ParamDef((hd,), (None,), "ones")
+    return defs
+
+
+def mla_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": ParamDef((d, m.q_lora_rank), (D_MODEL, None)),
+        "q_norm": ParamDef((m.q_lora_rank,), (None,), "ones"),
+        "wuq": ParamDef((m.q_lora_rank, h * qk_head), (None, HEADS)),
+        "wdkv": ParamDef((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                         (D_MODEL, None)),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), "ones"),
+        "wuk": ParamDef((m.kv_lora_rank, h * m.qk_nope_head_dim),
+                        (None, HEADS)),
+        "wuv": ParamDef((m.kv_lora_rank, h * m.v_head_dim), (None, HEADS)),
+        "wo": ParamDef((h * m.v_head_dim, d), (HEADS, D_MODEL)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (no S x S materialization)
+# ---------------------------------------------------------------------------
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: int = 0, softcap_val: float = 0.0,
+                      q_offset: int = 0, q_chunk: int = 512,
+                      kv_chunk: int = 1024, scale: Optional[float] = None,
+                      ) -> jax.Array:
+    """q: (B, Sq, H, Dk); k: (B, Skv, KV, Dk); v: (B, Skv, KV, Dv).
+
+    GQA via head grouping; online softmax over KV chunks inside a scan over Q
+    chunks. `q_offset` is the absolute position of q[0] (prefill continuation
+    / decode). Returns (B, Sq, H, Dv).
+    """
+    b, sq, h, dk = q.shape
+    _, skv, n_kv, dv = v.shape
+    g = h // n_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nkv = -(-skv // kv_chunk)
+    pad_q = nq * q_chunk - sq
+    pad_kv = nkv * kv_chunk - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+
+    qc = q.reshape(b, nq, q_chunk, n_kv, g, dk)
+    kc = k.reshape(b, nkv, kv_chunk, n_kv, dk)
+    vc = v.reshape(b, nkv, kv_chunk, n_kv, dv)
+
+    q_pos = (jnp.arange(nq * q_chunk) + q_offset).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+    kv_valid = (jnp.arange(nkv * kv_chunk) < skv).reshape(nkv, kv_chunk)
+
+    def q_step(_, qi):
+        qb, qp = qi                                   # (B,C,KV,g,Dk), (C,)
+
+        def kv_step(carry, ki):
+            o, m_run, l_run = carry
+            kb, vb, kp, kval = ki
+            s = jnp.einsum("bckgd,bukd->bkgcu", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap_val:
+                s = softcap_val * jnp.tanh(s / softcap_val)
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (qp[:, None] >= kp[None, :])
+            if window:
+                mask = mask & (qp[:, None] - kp[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(axis=-1)
+            o_new = (o * alpha[..., None]
+                     + jnp.einsum("bkgcu,bukd->bkgcd", p, vb,
+                                  preferred_element_type=jnp.float32))
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, n_kv, g, q_chunk, dv), jnp.float32)
+        m0 = jnp.full((b, n_kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_chunk), jnp.float32)
+        (o, m_f, l_f), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             kv_pos, kv_valid))
+        o = o / jnp.maximum(l_f[..., None], 1e-37)
+        return None, o.transpose(0, 3, 1, 2, 4)       # (B,C,KV,g,Dv)
+
+    _, out = jax.lax.scan(q_step, None,
+                          (qc.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def dense_attention(q, k, v, *, causal, window=0, softcap_val=0.0,
+                    q_offset=0, scale=None):
+    """Reference O(S^2)-memory attention (tests / tiny shapes)."""
+    b, sq, h, dk = q.shape
+    _, skv, n_kv, dv = v.shape
+    g = h // n_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    qg = q.reshape(b, sq, n_kv, g, dk)
+    s = jnp.einsum("bskgd,bukd->bkgsu", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    qp = jnp.arange(sq) + q_offset
+    kp = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgsu,bukd->bskgd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
+                      positions: jax.Array, kind: str,
+                      img_embeds: Optional[jax.Array] = None,
+                      use_chunked: Optional[bool] = None,
+                      shard_fn=None,
+                      ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Returns (out, kv) — kv returned so prefill can seed the cache.
+
+    Sharding: with the residual stream sequence-sharded (SP), the flash
+    chunk scans would all-gather every KV/Q chunk per step (measured: the
+    dominant collective term — EXPERIMENTS §Perf it.4). `shard_fn` reshards
+    q to head-parallel and k/v to replicated-over-model ONCE per layer, so
+    the chunked contraction is collective-free inside."""
+    if cfg.mla is not None and kind != CROSS_ATTN:
+        return mla_forward(cfg, p, x, positions, use_chunked=use_chunked,
+                           shard_fn=shard_fn)
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(x @ p["wq"], cfg.n_heads)
+    if kind == CROSS_ATTN:
+        assert img_embeds is not None
+        k = _split_heads(img_embeds @ p["wk"], cfg.n_kv_heads)
+        v = _split_heads(img_embeds @ p["wv"], cfg.n_kv_heads)
+    else:
+        k = _split_heads(x @ p["wk"], cfg.n_kv_heads)
+        v = _split_heads(x @ p["wv"], cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm" if kind != CROSS_ATTN else "k_norm_cross"],
+                     cfg.norm_eps)
+    if kind != CROSS_ATTN and cfg.use_rope:
+        theta = (cfg.rope_theta_local
+                 if (kind == LOCAL_ATTN and cfg.rope_theta_local)
+                 else cfg.rope_theta)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    causal = (kind != CROSS_ATTN) and not cfg.is_encoder
+    window = cfg.window_size if kind == LOCAL_ATTN else 0
+    chunked = use_chunked if use_chunked is not None else s > 1024
+    if chunked and shard_fn is not None:
+        q = shard_fn(q, ("batch", None, "heads", None))
+        k = shard_fn(k, ("batch", None, None, None))
+        v = shard_fn(v, ("batch", None, None, None))
+    fn = flash_attention_jnp if chunked else dense_attention
+    o = fn(q, k, v, causal=causal, window=window,
+           softcap_val=cfg.attn_softcap)
+    if chunked and shard_fn is not None:
+        o = shard_fn(o, ("batch", None, "heads", None))
+    out = o.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    if kind == CROSS_ATTN:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+        kv = None
+    else:
+        kv = (k, v)
+    return out, kv
+
+
+def mla_forward(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array,
+                use_chunked: Optional[bool] = None, shard_fn=None):
+    """DeepSeek MLA, expanded form for train/prefill. Returns (out, c_cache)
+    where c_cache = (c_kv, k_rope) is the compressed decode cache."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["wdkv"]
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B,S,rope_dim)
+
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    chunked = use_chunked if use_chunked is not None else s > 1024
+    if chunked and shard_fn is not None:
+        qq = shard_fn(qq, ("batch", None, "heads", None))
+        k = shard_fn(k, ("batch", None, "heads", None))
+        v = shard_fn(v, ("batch", None, "heads", None))
+    fn = flash_attention_jnp if chunked else dense_attention
+    o = fn(qq, k, v, causal=not cfg.is_encoder, scale=scale)
+    if chunked and shard_fn is not None:
+        o = shard_fn(o, ("batch", None, "heads", None))
+    out = o.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+    return out, (c_kv, k_rope)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Cache pytree for one attention layer (ShapeDtypeStruct-compatible)."""
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
+    eff_len = min(max_len, cfg.window_size) if (
+        kind == LOCAL_ATTN and cfg.window_size) else max_len
+    shape = (batch, eff_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cross_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads,
+                            cfg.head_dim), dtype)}
+
+
+def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                     pos: jax.Array, kind: str,
+                     ) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, D); pos: scalar int32 absolute position. Returns (out, cache')."""
+    if cfg.mla is not None and kind != CROSS_ATTN:
+        return mla_decode(cfg, p, x, cache, pos)
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = _split_heads(x @ p["wq"], cfg.n_heads)
+    if kind == CROSS_ATTN:
+        # K/V were computed at prefill and live in the cache unchanged.
+        k, v = cache["k"], cache["v"]
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        o = dense_attention(q, k, v, causal=False,
+                            softcap_val=cfg.attn_softcap)
+        out = o.reshape(b, 1, cfg.n_heads * hd) @ p["wo"]
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+        return out, cache
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        theta = (cfg.rope_theta_local
+                 if (kind == LOCAL_ATTN and cfg.rope_theta_local)
+                 else cfg.rope_theta)
+        posv = jnp.full((b, 1), pos)
+        q = apply_rope(q, posv, theta)
+        k = apply_rope(k, posv, theta)
+
+    window = cfg.window_size if kind == LOCAL_ATTN else 0
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len if window else pos          # ring buffer for SWA
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                  (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                  (0, slot, 0, 0))
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, g, hd)
+    s = jnp.einsum("bkgd,bukd->bkgu", qg, ck,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.attn_softcap:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    idx = jnp.arange(cache_len)
+    if window:
+        # ring buffer: slot i holds absolute position matching i modulo len,
+        # valid iff within `window` of pos and <= pos.
+        age = (slot - idx) % cache_len
+        valid = (age < window) & (age <= pos)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgu,bukd->bkgd", pr, cv,
+                   preferred_element_type=jnp.float32)
+    out = o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def mla_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+               pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Absorbed MLA decode: attention runs entirely in the compressed
+    kv_lora space — cache is (c_kv, k_rope), 576 values/token vs 64 KiB for
+    the expanded MHA equivalent. This is the decode-side expression of the
+    paper's 'same engine, transformed dataflow' idea."""
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, 1, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    posv = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+
+    dkv = x @ p["wdkv"]
+    c_new, kr_new = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kr_new, posv, cfg.rope_theta)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    # Absorb W_uk into q: score(t) = q_nope^T W_uk c_t + q_rope^T k_rope_t.
+    wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], wuk,
+                       preferred_element_type=jnp.float32)    # (B,H,c_rank)
+    s = (jnp.einsum("bhc,buc->bhu", q_abs,
+                    c_kv.astype(jnp.float32))
+         + jnp.einsum("bhd,bud->bhu", q_rope[:, 0].astype(jnp.float32),
+                      k_rope.astype(jnp.float32)))
+    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    valid = jnp.arange(c_kv.shape[1]) <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhu,buc->bhc", pr, c_kv.astype(jnp.float32))
+    wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhc,chd->bhd", o_c, wuv)                  # (B,H,v_dim)
+    out = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

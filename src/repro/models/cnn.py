@@ -1,0 +1,260 @@
+"""The paper's evaluation networks — AlexNet, VGGNet-16, ResNet-50 — in JAX,
+with every conv and FC layer routed through the multi-mode engine.
+
+Layer tables double as the input to `core.analytics` (paper Eqs. 15-18), so
+the same definition yields (a) a runnable functional model and (b) the
+MMIE-projected latency / memory-access / performance-efficiency numbers of
+the paper's Table 4 and Fig. 5.
+
+Note on ResNet-50 (DESIGN.md §Arch-applicability): the paper's Table 2
+counts the 49 main-path convolutions (1x 7x7, 16x 3x3, 32x 1x1) and models
+all 3x3/1x1 at S=1; the functional model below additionally contains the 4
+projection shortcuts and the stride-2 downsampling convs required for
+correctness. `analytics_layers(main_path_only=True)` reproduces the paper's
+counting; the functional path uses the real geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MultiModeEngine, default_engine
+from repro.core.analytics import ConvLayerSpec, FCLayerSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvDef:
+    name: str
+    c_in: int
+    c_out: int
+    k: int
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    pool: int = 1          # max-pool (k=stride=pool) applied after ReLU
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class FCDef:
+    name: str
+    n: int
+    m: int
+    relu: bool = True
+
+
+# ---------------------------------------------------------------------------
+# AlexNet (227x227x3 input; grouped conv2/4/5 as in Krizhevsky 2012)
+# ---------------------------------------------------------------------------
+
+ALEXNET_CONVS: Tuple[ConvDef, ...] = (
+    ConvDef("conv1", 3, 96, 11, stride=4, pad=0, pool=2),
+    ConvDef("conv2", 96, 256, 5, stride=1, pad=2, groups=2, pool=2),
+    ConvDef("conv3", 256, 384, 3, stride=1, pad=1),
+    ConvDef("conv4", 384, 384, 3, stride=1, pad=1, groups=2),
+    ConvDef("conv5", 384, 256, 3, stride=1, pad=1, groups=2, pool=2),
+)
+ALEXNET_FCS: Tuple[FCDef, ...] = (
+    FCDef("fc6", 9216, 4096),
+    FCDef("fc7", 4096, 4096),
+    FCDef("fc8", 4096, 1000, relu=False),
+)
+ALEXNET_INPUT = (227, 227, 3)
+
+# ---------------------------------------------------------------------------
+# VGGNet-16 (224x224x3; all 3x3 s1 p1)
+# ---------------------------------------------------------------------------
+
+def _vgg_block(name: str, c_in: int, c_out: int, n: int,
+               pool_last: bool = True) -> List[ConvDef]:
+    defs = []
+    for i in range(n):
+        defs.append(ConvDef(f"{name}_{i+1}", c_in if i == 0 else c_out, c_out,
+                            3, 1, 1, pool=2 if (pool_last and i == n - 1) else 1))
+    return defs
+
+
+VGG16_CONVS: Tuple[ConvDef, ...] = tuple(
+    _vgg_block("conv1", 3, 64, 2) + _vgg_block("conv2", 64, 128, 2)
+    + _vgg_block("conv3", 128, 256, 3) + _vgg_block("conv4", 256, 512, 3)
+    + _vgg_block("conv5", 512, 512, 3))
+VGG16_FCS: Tuple[FCDef, ...] = (
+    FCDef("fc6", 25088, 4096),
+    FCDef("fc7", 4096, 4096),
+    FCDef("fc8", 4096, 1000, relu=False),
+)
+VGG16_INPUT = (224, 224, 3)
+
+# ---------------------------------------------------------------------------
+# ResNet-50 (v1: stride-2 in the first 1x1 of downsampling bottlenecks)
+# ---------------------------------------------------------------------------
+
+RESNET50_STAGES = (  # (n_blocks, c_mid, c_out, first_stride)
+    (3, 64, 256, 1),
+    (4, 128, 512, 2),
+    (6, 256, 1024, 2),
+    (3, 512, 2048, 2),
+)
+RESNET50_FCS: Tuple[FCDef, ...] = (FCDef("fc", 2048, 1000, relu=False),)
+RESNET50_INPUT = (224, 224, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNDef:
+    name: str
+    input_hw_c: Tuple[int, int, int]
+    convs: Tuple[ConvDef, ...]      # empty for resnet (built structurally)
+    fcs: Tuple[FCDef, ...]
+    kind: str                       # "plain" | "resnet"
+
+
+CNNS: Dict[str, CNNDef] = {
+    "alexnet": CNNDef("alexnet", ALEXNET_INPUT, ALEXNET_CONVS, ALEXNET_FCS, "plain"),
+    "vgg16": CNNDef("vgg16", VGG16_INPUT, VGG16_CONVS, VGG16_FCS, "plain"),
+    "resnet50": CNNDef("resnet50", RESNET50_INPUT, (), RESNET50_FCS, "resnet"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Analytic layer tables (drive core.analytics / benchmarks.paper_tables)
+# ---------------------------------------------------------------------------
+
+def analytics_layers(name: str, main_path_only: bool = True,
+                     ) -> Tuple[List[ConvLayerSpec], List[FCLayerSpec]]:
+    """Conv/FC layer geometry tables for the paper's cost model."""
+    net = CNNS[name]
+    h, w, _ = net.input_hw_c
+    convs: List[ConvLayerSpec] = []
+    if net.kind == "plain":
+        for cd in net.convs:
+            spec = ConvLayerSpec(cd.name, h, w, cd.c_in, cd.c_out, cd.k, cd.k,
+                                 cd.stride, cd.pad, cd.groups)
+            convs.append(spec)
+            h, w = spec.h_out // cd.pool, spec.w_out // cd.pool
+    else:
+        # conv1 7x7/2 + maxpool/2
+        spec = ConvLayerSpec("conv1", h, w, 3, 64, 7, 7, 2, 3)
+        convs.append(spec)
+        h = w = spec.h_out // 2
+        c_in = 64
+        for si, (n_blocks, c_mid, c_out, first_stride) in enumerate(RESNET50_STAGES):
+            for b in range(n_blocks):
+                s = first_stride if b == 0 else 1
+                pre = f"s{si+2}b{b+1}"
+                # paper's counting keeps 1x1/3x3 at S=1; real geometry strides.
+                convs.append(ConvLayerSpec(f"{pre}_1x1a", h, w, c_in, c_mid,
+                                           1, 1, s if not main_path_only else s))
+                h2, w2 = (h + s - 1) // s, (w + s - 1) // s
+                convs.append(ConvLayerSpec(f"{pre}_3x3", h2, w2, c_mid, c_mid,
+                                           3, 3, 1, 1))
+                convs.append(ConvLayerSpec(f"{pre}_1x1b", h2, w2, c_mid, c_out,
+                                           1, 1, 1))
+                if b == 0 and not main_path_only:
+                    convs.append(ConvLayerSpec(f"{pre}_proj", h, w, c_in,
+                                               c_out, 1, 1, s))
+                h, w, c_in = h2, w2, c_out
+    fcs = [FCLayerSpec(f.name, f.n, f.m) for f in net.fcs]
+    return convs, fcs
+
+
+# ---------------------------------------------------------------------------
+# Functional models (init + apply through the multi-mode engine)
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, cd: ConvDef, dtype) -> Dict[str, jax.Array]:
+    fan_in = cd.k * cd.k * cd.c_in // cd.groups
+    w = jax.random.normal(key, (cd.k, cd.k, cd.c_in // cd.groups, cd.c_out),
+                          dtype) * (2.0 / fan_in) ** 0.5
+    return {"w": w, "b": jnp.zeros((cd.c_out,), dtype)}
+
+
+def _fc_init(key, fd: FCDef, dtype) -> Dict[str, jax.Array]:
+    w = jax.random.normal(key, (fd.n, fd.m), dtype) * (2.0 / fd.n) ** 0.5
+    return {"w": w, "b": jnp.zeros((fd.m,), dtype)}
+
+
+def init_cnn(name: str, key: jax.Array, dtype=jnp.float32) -> Dict:
+    net = CNNS[name]
+    params: Dict = {"conv": {}, "fc": {}}
+    if net.kind == "plain":
+        for cd in net.convs:
+            key, sub = jax.random.split(key)
+            params["conv"][cd.name] = _conv_init(sub, cd, dtype)
+    else:
+        convs, _ = analytics_layers(name, main_path_only=False)
+        for spec in convs:
+            key, sub = jax.random.split(key)
+            cd = ConvDef(spec.name, spec.c_in, spec.c_out, spec.w_f,
+                         spec.s, spec.pad)
+            params["conv"][spec.name] = _conv_init(sub, cd, dtype)
+    for fd in net.fcs:
+        key, sub = jax.random.split(key)
+        params["fc"][fd.name] = _fc_init(sub, fd, dtype)
+    return params
+
+
+def _maxpool(x: jax.Array, k: int) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def apply_cnn(name: str, params: Dict, x: jax.Array,
+              engine: Optional[MultiModeEngine] = None) -> jax.Array:
+    """Forward pass. x: (B, H, W, 3) -> logits (B, 1000)."""
+    eng = engine or default_engine()
+    net = CNNS[name]
+    if net.kind == "plain":
+        for cd in net.convs:
+            p = params["conv"][cd.name]
+            x = eng.conv2d(x, p["w"], stride=cd.stride, pad=cd.pad,
+                           groups=cd.groups) + p["b"]
+            if cd.relu:
+                x = jax.nn.relu(x)
+            if cd.pool > 1:
+                x = _maxpool(x, cd.pool)
+    else:
+        x = _resnet50_body(params, x, eng)
+    if net.kind == "plain":
+        x = x.reshape(x.shape[0], -1)
+    else:
+        x = x.mean(axis=(1, 2))     # global average pool
+    for fd in net.fcs:
+        p = params["fc"][fd.name]
+        x = eng.matmul(x, p["w"]) + p["b"]
+        if fd.relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _resnet50_body(params: Dict, x: jax.Array, eng: MultiModeEngine) -> jax.Array:
+    pc = params["conv"]
+
+    def conv(nm, x, stride, pad):
+        p = pc[nm]
+        return eng.conv2d(x, p["w"], stride=stride, pad=pad) + p["b"]
+
+    x = jax.nn.relu(conv("conv1", x, 2, 3))
+    x = _maxpool(jnp.pad(x, ((0, 0), (0, 1), (0, 1), (0, 0)),
+                         constant_values=-jnp.inf), 2)
+    for si, (n_blocks, c_mid, c_out, first_stride) in enumerate(RESNET50_STAGES):
+        for b in range(n_blocks):
+            s = first_stride if b == 0 else 1
+            pre = f"s{si+2}b{b+1}"
+            res = x
+            y = jax.nn.relu(conv(f"{pre}_1x1a", x, s, 0))
+            y = jax.nn.relu(conv(f"{pre}_3x3", y, 1, 1))
+            y = conv(f"{pre}_1x1b", y, 1, 0)
+            if b == 0:
+                res = conv(f"{pre}_proj", x, s, 0)
+            x = jax.nn.relu(y + res)
+    return x
+
+
+def total_macs(name: str) -> Tuple[int, int]:
+    """(conv MACs, FC MACs) — cross-check against the paper's §1 numbers."""
+    convs, fcs = analytics_layers(name)
+    return sum(c.macs for c in convs), sum(f.macs for f in fcs)

@@ -1,0 +1,35 @@
+"""Dense FFN (gated SwiGLU / plain MLP) — pure FC-mode GEMMs."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ACTIVATIONS, D_FF, D_MODEL, ParamDef
+
+
+def ffn_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    defs = {
+        "w_in": ParamDef((d, f), (D_MODEL, D_FF)),
+        "w_out": ParamDef((f, d), (D_FF, D_MODEL)),
+    }
+    if cfg.gated_ffn:
+        defs["w_gate"] = ParamDef((d, f), (D_MODEL, D_FF))
+    return defs
+
+
+def ffn_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    act = ACTIVATIONS[cfg.act]
+    h = jnp.einsum("...d,df->...f", x, p["w_in"],
+                   preferred_element_type=jnp.float32)
+    if cfg.gated_ffn:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"],
+                       preferred_element_type=jnp.float32)
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("...f,fd->...d", h.astype(x.dtype), p["w_out"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,372 @@
+"""Memory-bounded attention with a custom VJP (pure-JAX flash attention).
+
+Forward: online-softmax over KV chunks inside a scan over Q chunks, saving
+only (o, logsumexp) — no (S x S) tensor.
+Backward: FlashAttention-2 style block recomputation — for each (kv, q)
+block pair the score tile is rebuilt from q, k, L and consumed immediately;
+residual memory is O(activations), never O(S^2).
+
+Without this, scan autodiff stores every chunk's probability tile and the
+memory term explodes (observed: 8 GiB score stacks per layer on
+deepseek-v3 train_4k — see EXPERIMENTS.md §Perf, iteration 1).
+
+Supports: GQA head grouping, causal + sliding-window masks, logit softcap
+(gemma2), q position offset. Layout: q (B, Sq, H, Dk), k/v (B, Skv, KV, D).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _mask(qp, kp, kval, causal, window):
+    m = kval[None, :]
+    if causal:
+        m = m & (qp[:, None] >= kp[None, :])
+    if window:
+        m = m & (qp[:, None] - kp[None, :] < window)
+    return m
+
+
+def _fwd_impl(q, k, v, causal, window, softcap_val, q_offset, q_chunk,
+              kv_chunk, scale, skv_orig):
+    """Returns (out (B,KV,G,Sq,Dv) f32, lse (B,KV,G,Sq) f32) on padded
+    blocked shapes."""
+    b, n_kv, g, sq, dk = q.shape
+    skv, dv = v.shape[2], v.shape[3]
+    nq = sq // q_chunk
+    nkv = skv // kv_chunk
+
+    qc = q.reshape(b, n_kv, g, nq, q_chunk, dk).transpose(3, 0, 1, 2, 4, 5)
+    kc = k.reshape(b, n_kv, nkv, kv_chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, n_kv, nkv, kv_chunk, dv).transpose(2, 0, 1, 3, 4)
+    q_pos = (jnp.arange(nq * q_chunk) + q_offset).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+    kv_valid = kv_pos < skv_orig          # mask kv padding
+
+    def q_step(_, qi):
+        qb, qp = qi
+
+        def kv_step(carry, ki):
+            o, m_run, l_run = carry
+            kb, vb, kp, kval = ki
+            s = jnp.einsum("bkgcd,bkud->bkgcu", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap_val:
+                s = softcap_val * jnp.tanh(s / softcap_val)
+            s = jnp.where(_mask(qp, kp, kval, causal, window)[None, None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bkgcu,bkud->bkgcd", p, vb,
+                preferred_element_type=jnp.float32)
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, n_kv, g, q_chunk, dv), jnp.float32)
+        m0 = jnp.full((b, n_kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_chunk), jnp.float32)
+        (o, m_f, l_f), _ = jax.lax.scan(kv_step, (o0, m0, l0),
+                                        (kc, vc, kv_pos, kv_valid))
+        o = o / jnp.maximum(l_f[..., None], 1e-37)
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-37))
+        return None, (o.astype(q.dtype), lse)
+
+    _, (o_blocks, lse_blocks) = jax.lax.scan(q_step, None, (qc, q_pos))
+    out = o_blocks.transpose(1, 2, 3, 0, 4, 5).reshape(b, n_kv, g, sq, dv)
+    lse = lse_blocks.transpose(1, 2, 3, 0, 4).reshape(b, n_kv, g, sq)
+    return out, lse
+
+
+def _bwd_impl(q, k, v, out, lse, do, causal, window, softcap_val, q_offset,
+              q_chunk, kv_chunk, scale, skv_orig):
+    b, n_kv, g, sq, dk = q.shape
+    skv, dv = v.shape[2], v.shape[3]
+    nq = sq // q_chunk
+    nkv = skv // kv_chunk
+
+    delta = (do * out.astype(jnp.float32)).sum(axis=-1)  # (B,KV,G,Sq)
+    qc = q.reshape(b, n_kv, g, nq, q_chunk, dk).transpose(3, 0, 1, 2, 4, 5)
+    doc = do.reshape(b, n_kv, g, nq, q_chunk, dv).transpose(3, 0, 1, 2, 4, 5)
+    lsec = lse.reshape(b, n_kv, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    dc = delta.reshape(b, n_kv, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    kc = k.reshape(b, n_kv, nkv, kv_chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, n_kv, nkv, kv_chunk, dv).transpose(2, 0, 1, 3, 4)
+    q_pos = (jnp.arange(nq * q_chunk) + q_offset).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+    kv_valid = kv_pos < skv_orig
+
+    def kv_step(dq_acc, ki):
+        kb, vb, kp, kval = ki
+
+        def q_step(_, qi):
+            qb, dob, lseb, db, qp = qi
+            s_pre = jnp.einsum("bkgcd,bkud->bkgcu", qb, kb,
+                               preferred_element_type=jnp.float32) * scale
+            if softcap_val:
+                s = softcap_val * jnp.tanh(s_pre / softcap_val)
+            else:
+                s = s_pre
+            msk = _mask(qp, kp, kval, causal, window)[None, None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])           # (B,KV,G,C,U)
+            dp = jnp.einsum("bkgcd,bkud->bkgcu", dob, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - db[..., None])
+            if softcap_val:
+                ds = ds * (1.0 - (s / softcap_val) ** 2)
+            ds = jnp.where(msk, ds, 0.0)
+            dqb = jnp.einsum("bkgcu,bkud->bkgcd", ds, kb,
+                             preferred_element_type=jnp.float32) * scale
+            dkb = jnp.einsum("bkgcu,bkgcd->bkud", ds, qb,
+                             preferred_element_type=jnp.float32) * scale
+            dvb = jnp.einsum("bkgcu,bkgcd->bkud", p, dob,
+                             preferred_element_type=jnp.float32)
+            return None, (dqb, dkb, dvb)
+
+        _, (dq_blocks, dk_parts, dv_parts) = jax.lax.scan(
+            q_step, None, (qc, doc, lsec, dc, q_pos))
+        dq_acc = dq_acc + dq_blocks.transpose(1, 2, 3, 0, 4, 5).reshape(
+            b, n_kv, g, sq, dk)
+        return dq_acc, (dk_parts.sum(axis=0), dv_parts.sum(axis=0))
+
+    dq0 = jnp.zeros((b, n_kv, g, sq, dk), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(kv_step, dq0,
+                                              (kc, vc, kv_pos, kv_valid))
+    dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(b, n_kv, skv, dk)
+    dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(b, n_kv, skv, dv)
+    return dq, dk, dv
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _flash(q, k, v, causal, window, softcap_val, q_offset, q_chunk,
+           kv_chunk, scale, skv_orig):
+    out, _ = _fwd_impl(q, k, v, causal, window, softcap_val, q_offset,
+                       q_chunk, kv_chunk, scale, skv_orig)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, softcap_val, q_offset, q_chunk,
+               kv_chunk, scale, skv_orig):
+    out, lse = _fwd_impl(q, k, v, causal, window, softcap_val, q_offset,
+                         q_chunk, kv_chunk, scale, skv_orig)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, softcap_val, q_offset, q_chunk, kv_chunk,
+               scale, skv_orig, res, dout):
+    q, k, v, out, lse = res
+    dq, dk, dv = _bwd_impl(q, k, v, out, lse, dout.astype(jnp.float32),
+                           causal, window, softcap_val, q_offset, q_chunk,
+                           kv_chunk, scale, skv_orig)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window: int = 0,
+                        softcap_val: float = 0.0, q_offset: int = 0,
+                        q_chunk: int = 512, kv_chunk: int = 1024,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Drop-in replacement for models.attention.chunked_attention with a
+    memory-bounded backward. q: (B, Sq, H, Dk); k/v: (B, Skv, KV, D)."""
+    b, sq, h, dk = q.shape
+    _, skv, n_kv, dv = v.shape
+    g = h // n_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    windowed = bool(window) and window < skv and causal
+    if windowed:
+        q_chunk = kv_chunk = min(q_chunk, kv_chunk, sq, skv)
+    else:
+        q_chunk = min(q_chunk, sq)
+        kv_chunk = min(kv_chunk, skv)
+    nq, nkv = -(-sq // q_chunk), -(-skv // kv_chunk)
+    pq, pkv = nq * q_chunk - sq, nkv * kv_chunk - skv
+
+    qg = q.reshape(b, sq, n_kv, g, dk).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    if pq:
+        qg = jnp.pad(qg, ((0, 0),) * 3 + ((0, pq), (0, 0)))
+    if pkv:
+        # padded kv must never win the softmax: mask via kv positions below
+        kg = jnp.pad(kg, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+
+    if windowed:
+        out = _flash_win(qg, kg, vg, causal, window, float(softcap_val),
+                         int(q_offset), q_chunk, scale, skv)
+    else:
+        out = _flash(qg, kg, vg, causal, window,
+                     float(softcap_val), int(q_offset), q_chunk, kv_chunk,
+                     scale, skv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, nq * q_chunk, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Windowed (banded) flash — sliding-window layers visit only the kv chunks
+# inside the band instead of scanning all of them and masking (gemma2/3
+# local layers: S/window x fewer score FLOPs; §Perf iteration 5).
+# ---------------------------------------------------------------------------
+
+def _win_fwd(q, k, v, causal, window, softcap_val, q_offset, chunk, scale,
+             skv_orig):
+    b, n_kv, g, sq, dk = q.shape
+    skv, dv = v.shape[2], v.shape[3]
+    nq, nkv = sq // chunk, skv // chunk
+    n_rel = min(nkv, (window + 2 * chunk - 2) // chunk + 1)
+
+    qc = q.reshape(b, n_kv, g, nq, chunk, dk).transpose(3, 0, 1, 2, 4, 5)
+    kc = k.reshape(b, n_kv, nkv, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, n_kv, nkv, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_idx):
+        qb, qi = qi_idx
+        qp = qi * chunk + jnp.arange(chunk) + q_offset
+        # lowest kv position the band can touch (absolute coordinates)
+        lo = qi * chunk + q_offset - window + 1
+        start = jnp.clip(lo // chunk, 0, nkv - n_rel)
+
+        def kv_step(carry, r):
+            o, m_run, l_run = carry
+            ci = start + r
+            kb = jax.lax.dynamic_index_in_dim(kc, ci, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, ci, 0, keepdims=False)
+            kp = ci * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bkgcd,bkud->bkgcu", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap_val:
+                s = softcap_val * jnp.tanh(s / softcap_val)
+            msk = _mask(qp, kp, kp < skv_orig, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bkgcu,bkud->bkgcd", p, vb,
+                preferred_element_type=jnp.float32)
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, n_kv, g, chunk, dv), jnp.float32)
+        m0 = jnp.full((b, n_kv, g, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, chunk), jnp.float32)
+        (o, m_f, l_f), _ = jax.lax.scan(kv_step, (o0, m0, l0),
+                                        jnp.arange(n_rel))
+        o = o / jnp.maximum(l_f[..., None], 1e-37)
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-37))
+        return None, (o.astype(q.dtype), lse)
+
+    _, (o_blocks, lse_blocks) = jax.lax.scan(
+        q_step, None, (qc, jnp.arange(nq)))
+    out = o_blocks.transpose(1, 2, 3, 0, 4, 5).reshape(b, n_kv, g, sq, dv)
+    lse = lse_blocks.transpose(1, 2, 3, 0, 4).reshape(b, n_kv, g, sq)
+    return out, lse
+
+
+def _win_bwd(q, k, v, out, lse, do, causal, window, softcap_val, q_offset,
+             chunk, scale, skv_orig):
+    b, n_kv, g, sq, dk = q.shape
+    skv, dv = v.shape[2], v.shape[3]
+    nq, nkv = sq // chunk, skv // chunk
+    n_rel = min(nkv, (window + 2 * chunk - 2) // chunk + 1)
+
+    delta = (do * out.astype(jnp.float32)).sum(axis=-1)
+    qc = q.reshape(b, n_kv, g, nq, chunk, dk).transpose(3, 0, 1, 2, 4, 5)
+    doc = do.reshape(b, n_kv, g, nq, chunk, dv).transpose(3, 0, 1, 2, 4, 5)
+    lsec = lse.reshape(b, n_kv, g, nq, chunk).transpose(3, 0, 1, 2, 4)
+    dc = delta.reshape(b, n_kv, g, nq, chunk).transpose(3, 0, 1, 2, 4)
+    kc = k.reshape(b, n_kv, nkv, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, n_kv, nkv, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    def q_step(carry, qi_in):
+        dk_acc, dv_acc = carry
+        qb, dob, lseb, db, qi = qi_in
+        qp = qi * chunk + jnp.arange(chunk) + q_offset
+        lo = qi * chunk + q_offset - window + 1
+        start = jnp.clip(lo // chunk, 0, nkv - n_rel)
+        kwin = jax.lax.dynamic_slice_in_dim(kc, start, n_rel, 0)
+        vwin = jax.lax.dynamic_slice_in_dim(vc, start, n_rel, 0)
+
+        def rel_step(_, rin):
+            kb, vb, r = rin
+            kp = (start + r) * chunk + jnp.arange(chunk)
+            s_pre = jnp.einsum("bkgcd,bkud->bkgcu", qb, kb,
+                               preferred_element_type=jnp.float32) * scale
+            s = (softcap_val * jnp.tanh(s_pre / softcap_val)
+                 if softcap_val else s_pre)
+            msk = _mask(qp, kp, kp < skv_orig, causal, window)[
+                None, None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])
+            dp = jnp.einsum("bkgcd,bkud->bkgcu", dob, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - db[..., None])
+            if softcap_val:
+                ds = ds * (1.0 - (s / softcap_val) ** 2)
+            ds = jnp.where(msk, ds, 0.0)
+            dqp = jnp.einsum("bkgcu,bkud->bkgcd", ds, kb,
+                             preferred_element_type=jnp.float32) * scale
+            dkp = jnp.einsum("bkgcu,bkgcd->bkud", ds, qb,
+                             preferred_element_type=jnp.float32) * scale
+            dvp = jnp.einsum("bkgcu,bkgcd->bkud", p, dob,
+                             preferred_element_type=jnp.float32)
+            return None, (dqp, dkp, dvp)
+
+        _, (dq_parts, dk_parts, dv_parts) = jax.lax.scan(
+            rel_step, None, (kwin, vwin, jnp.arange(n_rel)))
+        dq_i = dq_parts.sum(axis=0)
+        dk_acc = jax.lax.dynamic_update_slice_in_dim(
+            dk_acc, jax.lax.dynamic_slice_in_dim(dk_acc, start, n_rel, 0)
+            + dk_parts, start, 0)
+        dv_acc = jax.lax.dynamic_update_slice_in_dim(
+            dv_acc, jax.lax.dynamic_slice_in_dim(dv_acc, start, n_rel, 0)
+            + dv_parts, start, 0)
+        return (dk_acc, dv_acc), dq_i
+
+    dk0 = jnp.zeros((nkv, b, n_kv, chunk, dk), jnp.float32)
+    dv0 = jnp.zeros((nkv, b, n_kv, chunk, dv), jnp.float32)
+    (dk_f, dv_f), dq_blocks = jax.lax.scan(
+        q_step, (dk0, dv0), (qc, doc, lsec, dc, jnp.arange(nq)))
+    dq = dq_blocks.transpose(1, 2, 3, 0, 4, 5).reshape(b, n_kv, g, sq, dk)
+    dk_o = dk_f.transpose(1, 2, 0, 3, 4).reshape(b, n_kv, skv, dk)
+    dv_o = dv_f.transpose(1, 2, 0, 3, 4).reshape(b, n_kv, skv, dv)
+    return dq, dk_o, dv_o
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_win(q, k, v, causal, window, softcap_val, q_offset, chunk,
+               scale, skv_orig):
+    out, _ = _win_fwd(q, k, v, causal, window, softcap_val, q_offset,
+                      chunk, scale, skv_orig)
+    return out
+
+
+def _flash_win_fwd(q, k, v, causal, window, softcap_val, q_offset, chunk,
+                   scale, skv_orig):
+    out, lse = _win_fwd(q, k, v, causal, window, softcap_val, q_offset,
+                        chunk, scale, skv_orig)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_win_bwd(causal, window, softcap_val, q_offset, chunk, scale,
+                   skv_orig, res, dout):
+    q, k, v, out, lse = res
+    dq, dk, dv = _win_bwd(q, k, v, out, lse, dout.astype(jnp.float32),
+                          causal, window, softcap_val, q_offset, chunk,
+                          scale, skv_orig)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_win.defvjp(_flash_win_fwd, _flash_win_bwd)

@@ -1,0 +1,171 @@
+"""Shared building blocks: parameter definitions (one source of truth for
+init / sharding-spec / shape trees), norms, rotary embeddings, activations.
+
+Every weight in the repo is declared as a `ParamDef` carrying *logical* axis
+names; `parallel.sharding` maps logical axes onto mesh axes. The same def
+tree materializes as:
+  * real arrays            (`init_tree`)        — tests / examples,
+  * ShapeDtypeStructs      (`shape_tree`)       — the multi-pod dry-run,
+  * jax.sharding.PartitionSpec (`spec_tree`)    — pjit in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary (see parallel/sharding.py for the mesh mapping).
+BATCH, SEQ, D_MODEL, D_FF, HEADS, KV_HEADS, HEAD_DIM, VOCAB, EXPERTS, \
+    LAYERS, STATE, CONV, IMG = (
+        "batch", "seq", "d_model", "d_ff", "heads", "kv_heads", "head_dim",
+        "vocab", "experts", "layers", "state", "conv", "img")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis per dim (None = replicated)
+    init: str = "normal"                 # normal | zeros | ones | scaled
+    scale: Optional[float] = None        # stddev override (normal/scaled)
+    dtype: Any = None                    # default: factory dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+DefTree = Any  # nested dict of ParamDef
+
+
+def _leaf_init(d: ParamDef, key, dtype) -> jax.Array:
+    dt = d.dtype or dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "normal" or d.init == "scaled":
+        fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[0], 1)
+        if len(d.shape) >= 3:  # stacked/expert weights: fan-in is 2nd-to-last
+            fan_in = d.shape[-2]
+        std = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dt)
+    raise ValueError(d.init)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs: DefTree, key: jax.Array, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = [_leaf_init(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shape_tree(defs: DefTree, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype),
+        defs, is_leaf=_is_def)
+
+
+def axes_tree(defs: DefTree):
+    return jax.tree_util.tree_map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def count_params(defs: DefTree) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree_util.tree_leaves(defs, is_leaf=_is_def))
+
+
+def stack_defs(defs: DefTree, n: int) -> DefTree:
+    """Prepend a LAYERS axis of length n to every leaf (scan-over-layers)."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, (LAYERS,) + d.axes, d.init,
+                           d.scale, d.dtype),
+        defs, is_leaf=_is_def)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations (fp32 internals, cast back)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             scale_plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    y = y * (1.0 + s) if scale_plus_one else y * s
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+ACTIVATIONS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies, fp32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               ) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                      # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                            # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head (FC mode of the multi-mode engine)
+# ---------------------------------------------------------------------------
+
+def embed_def(vocab: int, d_model: int) -> ParamDef:
+    return ParamDef((vocab, d_model), (VOCAB, D_MODEL), "normal", scale=1.0)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array,
+                 scale_by_dim: bool = False) -> jax.Array:
+    y = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:
+        y = (y.astype(jnp.float32) * math.sqrt(table.shape[1])).astype(y.dtype)
+    return y
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits via the tied embedding (FC mode). x: (..., D) -> (..., V)."""
+    return jnp.einsum("...d,vd->...v", x, table,
+                      preferred_element_type=jnp.float32)

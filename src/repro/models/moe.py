@@ -1,0 +1,236 @@
+"""Mixture-of-Experts FFN with top-k routing, shared experts, and two
+dispatch engines:
+
+* `dense`  — exact, capacity-free dispatch via (T, E) combine matrices and
+  grouped einsums. O(E*T*D) memory: only for tests / reduced configs /
+  decode-sized token counts.
+
+* `ep`     — production expert parallelism under `shard_map`: tokens are
+  routed locally, packed into fixed-capacity per-expert buffers, exchanged
+  with `lax.all_to_all` over the `model` mesh axis (experts live there),
+  run through grouped FC-mode GEMMs over the stacked expert weights, and
+  combined back. Expert d_model is FSDP-sharded over `data` and gathered at
+  use. This is the paper's communication pattern — stream activations once,
+  keep weights resident — mapped onto jax-native collectives instead of a
+  weight-generator bus.
+
+Both paths share the router; tests assert they agree (up to capacity drops,
+which tests disable via capacity_factor large enough for no drops).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import ACTIVATIONS, D_FF, D_MODEL, EXPERTS, ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    mc: MoEConfig = cfg.moe
+    d, f, e = cfg.d_model, mc.d_ff_expert, mc.n_experts
+    defs = {
+        "router": ParamDef((d, e), (D_MODEL, None), scale=0.02),
+        "w_in": ParamDef((e, d, f), (EXPERTS, D_MODEL, D_FF)),
+        "w_gate": ParamDef((e, d, f), (EXPERTS, D_MODEL, D_FF)),
+        "w_out": ParamDef((e, f, d), (EXPERTS, D_FF, D_MODEL)),
+    }
+    if mc.n_shared:
+        fs = mc.d_ff_expert * mc.n_shared
+        defs["shared_w_in"] = ParamDef((d, fs), (D_MODEL, D_FF))
+        defs["shared_w_gate"] = ParamDef((d, fs), (D_MODEL, D_FF))
+        defs["shared_w_out"] = ParamDef((fs, d), (D_FF, D_MODEL))
+    return defs
+
+
+def router_probs(cfg: ModelConfig, p: Dict, x: jax.Array,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing. x: (T, D) -> (weights (T,k), idx (T,k), probs (T,E))."""
+    mc = cfg.moe
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, mc.n_active)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx, probs
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int
+                      ) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss."""
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def _shared_ffn(cfg: ModelConfig, p: Dict, xt: jax.Array) -> jax.Array:
+    act = ACTIVATIONS[cfg.act]
+    hs = jnp.einsum("td,df->tf", xt, p["shared_w_in"],
+                    preferred_element_type=jnp.float32)
+    gs = jnp.einsum("td,df->tf", xt, p["shared_w_gate"],
+                    preferred_element_type=jnp.float32)
+    return jnp.einsum("tf,fd->td", (act(gs) * hs).astype(xt.dtype),
+                      p["shared_w_out"],
+                      preferred_element_type=jnp.float32).astype(xt.dtype)
+
+
+def _expert_gemms(cfg: ModelConfig, p: Dict, xe: jax.Array) -> jax.Array:
+    """xe: (E, C, D) -> (E, C, D) through each expert's gated FFN."""
+    act = ACTIVATIONS[cfg.act]
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"],
+                   preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    h = (act(g) * h).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"],
+                      preferred_element_type=jnp.float32).astype(xe.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense (exact) dispatch
+# ---------------------------------------------------------------------------
+
+def moe_forward_dense(cfg: ModelConfig, p: Dict, x: jax.Array,
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss). O(E*T*D) — small token counts only."""
+    mc: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    weights, idx, probs = router_probs(cfg, p, xt)
+    aux = load_balance_loss(probs, idx, mc.n_experts)
+
+    comb = jnp.zeros((b * s, mc.n_experts), jnp.float32)
+    comb = comb.at[jnp.arange(b * s)[:, None], idx].add(weights)
+    disp = (comb > 0).astype(xt.dtype)
+    xe = jnp.einsum("te,td->etd", disp, xt)
+    ye = _expert_gemms(cfg, p, xe)
+    y = jnp.einsum("etd,te->td", ye.astype(jnp.float32),
+                   comb).astype(x.dtype)
+    if mc.n_shared:
+        y = y + _shared_ffn(cfg, p, xt)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel dispatch (shard_map + all_to_all over `model`)
+# ---------------------------------------------------------------------------
+
+def _pack_local(cfg: ModelConfig, xt: jax.Array, idx: jax.Array,
+                capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack local tokens into per-expert fixed-capacity buffers.
+
+    Returns (buf (E, C, D), slot (T, k), fits (T, k)): slot[t, j] is the
+    buffer position of token t's j-th expert copy; fits marks copies within
+    capacity (dropped copies contribute zero and lose their router weight,
+    standard fixed-capacity semantics).
+    """
+    mc = cfg.moe
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    # position of each copy within its expert queue (order = token order)
+    onehot = jax.nn.one_hot(flat_e, mc.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                       # (T*k, E)
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    fits = slot < capacity
+    slot_c = jnp.where(fits, slot, capacity - 1)
+    buf = jnp.zeros((mc.n_experts, capacity, xt.shape[1]), xt.dtype)
+    src = jnp.repeat(jnp.arange(t), k)
+    upd = jnp.where(fits[:, None], xt[src], 0)
+    buf = buf.at[flat_e, slot_c].add(upd)
+    return buf, slot.reshape(t, k), fits.reshape(t, k)
+
+
+def moe_forward_ep(cfg: ModelConfig, p: Dict, x: jax.Array, mesh,
+                   dp_axes: Tuple[str, ...], tp_axis: str,
+                   capacity_factor: float = 1.25,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE. x: (B, S, D) sharded (dp, tp, None).
+
+    Experts are sharded over `tp_axis`; expert d_model is FSDP-sharded over
+    dp_axes[-1] and gathered inside. Fixed per-source-shard capacity.
+    """
+    mc: MoEConfig = cfg.moe
+    tp = mesh.shape[tp_axis]
+    e_loc = mc.n_experts // tp
+    b, s, d = x.shape
+    t_loc = (b // math.prod(mesh.shape[a] for a in dp_axes)) * (s // tp)
+    capacity = max(4, int(math.ceil(mc.n_active * t_loc * capacity_factor
+                                    / mc.n_experts)))
+    fsdp_axis = dp_axes[-1]
+
+    def body(x_loc, router_w, w_in, w_gate, w_out, shared):
+        bl, sl, _ = x_loc.shape
+        xt = x_loc.reshape(bl * sl, d)
+        weights, idx, probs = router_probs(cfg, {"router": router_w}, xt)
+        aux = load_balance_loss(probs, idx, mc.n_experts)
+        aux = jax.lax.pmean(aux, (*dp_axes, tp_axis))
+
+        buf, slot, fits = _pack_local(cfg, xt, idx, capacity)   # (E, C, D)
+        # all_to_all over the expert axis: send each expert-block to its rank.
+        buf = buf.reshape(tp, e_loc, capacity, d)
+        recv = jax.lax.all_to_all(buf, tp_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)       # (src_rank, E_l, C, D)
+        # per local expert, concatenate every source rank's token slab
+        xe = recv.transpose(1, 0, 2, 3).reshape(e_loc, tp * capacity, d)
+
+        # FSDP gather of the expert weights' d_model shard.
+        wi = _ag(w_in, fsdp_axis, 1)
+        wg = _ag(w_gate, fsdp_axis, 1)
+        wo = _ag(w_out, fsdp_axis, 2)
+        ye = _expert_gemms(cfg, {"w_in": wi, "w_gate": wg, "w_out": wo}, xe)
+
+        # invert the packing exactly: (E_l, src*C, D) -> (src, E_l, C, D)
+        back = ye.reshape(e_loc, tp, capacity, d).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(back, tp_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)       # (owner_rank, E_l, C, D)
+        back = back.reshape(mc.n_experts, capacity, d)
+        gathered = back[idx.reshape(-1),
+                        jnp.where(fits.reshape(-1), slot.reshape(-1), 0)]
+        gathered = jnp.where(fits.reshape(-1)[:, None], gathered, 0)
+        y = (gathered.reshape(bl * sl, mc.n_active, d).astype(jnp.float32)
+             * weights[..., None]).sum(axis=1).astype(x_loc.dtype)
+        if mc.n_shared:
+            y = y + _shared_ffn(cfg, shared, xt)
+        return y.reshape(bl, sl, d), aux
+
+    def _ag(w, axis_name, dim):
+        return jax.lax.all_gather(w, axis_name, axis=dim, tiled=True)
+
+    dp = tuple(dp_axes)
+    shared_p = ({k: p[k] for k in ("shared_w_in", "shared_w_gate",
+                                   "shared_w_out")} if mc.n_shared else
+                {"_": jnp.zeros((1,), x.dtype)})
+    in_specs = (
+        P(dp, tp_axis, None),                    # x (B, S, D)
+        P(None, None),                           # router (replicated)
+        P(tp_axis, fsdp_axis, None),             # w_in (E, D, F)
+        P(tp_axis, fsdp_axis, None),             # w_gate
+        P(tp_axis, None, fsdp_axis),             # w_out (E, F, D)
+        # shared experts enter replicated (GSPMD all-gathers at the boundary)
+        jax.tree_util.tree_map(
+            lambda a: P(*(None,) * a.ndim), shared_p),
+    )
+    out_specs = (P(dp, tp_axis, None), P())
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(x, p["router"], p["w_in"], p["w_gate"], p["w_out"], shared_p)
+
+
+def moe_forward(cfg: ModelConfig, p: Dict, x: jax.Array, *,
+                mesh=None, dp_axes: Optional[Tuple[str, ...]] = None,
+                tp_axis: Optional[str] = None,
+                capacity_factor: float = 1.25,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch-engine selection: EP when a mesh with a nontrivial tp axis is
+    provided and experts divide over it; dense otherwise."""
+    if (mesh is not None and tp_axis is not None
+            and mesh.shape[tp_axis] > 1
+            and cfg.moe.n_experts % mesh.shape[tp_axis] == 0):
+        return moe_forward_ep(cfg, p, x, mesh, dp_axes, tp_axis,
+                              capacity_factor)
+    return moe_forward_dense(cfg, p, x)

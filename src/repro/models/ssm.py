@@ -1,0 +1,442 @@
+"""State-space / recurrent blocks: Mamba (Jamba), mLSTM and sLSTM (xLSTM).
+
+All three share the repo's execution contract:
+  * projections are FC-mode GEMMs,
+  * the short depthwise conv (W_f = 4, S = 1) is the GFID 1-D conv mode
+    (T = 4 active taps — see core/modes.py) and lowers to
+    `kernels.conv1d` on TPU,
+  * the sequence dimension is processed in *chunks*: a sequential
+    `lax.scan` over chunks carrying O(1) state, with parallel (intra-chunk)
+    math inside — the linear-attention analogue of never materializing the
+    full GFID matrix.
+
+Decode paths carry explicit recurrent state (conv tail + SSM/matrix-memory
+state), giving O(1) per-token cost — this is why these archs run the
+long_500k cell (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core.gfid import conv1d_depthwise_gfid
+from repro.models.layers import (
+    CONV, D_FF, D_MODEL, HEADS, HEAD_DIM, STATE, ParamDef, rms_norm)
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, ds = cfg.d_model, _d_inner(cfg), cfg.ssm.d_state
+    dr = _dt_rank(cfg)
+    return {
+        "w_in": ParamDef((d, 2 * di), (D_MODEL, D_FF)),
+        "conv_w": ParamDef((cfg.ssm.d_conv, di), (CONV, D_FF), scale=0.5),
+        "conv_b": ParamDef((di,), (D_FF,), "zeros"),
+        "w_x": ParamDef((di, dr + 2 * ds), (D_FF, None)),
+        "w_dt": ParamDef((dr, di), (None, D_FF)),
+        "dt_bias": ParamDef((di,), (D_FF,), "zeros"),
+        "a_log": ParamDef((di, ds), (D_FF, STATE), "ones"),
+        "d_skip": ParamDef((di,), (D_FF,), "ones"),
+        "norm": ParamDef((di,), (D_FF,), "ones"),       # Jamba inner RMSNorm
+        "w_out": ParamDef((di, d), (D_FF, D_MODEL)),
+    }
+
+
+def _ssm_scan_chunked(x, dt, b_in, c_in, a, chunk: int):
+    """Selective scan h_t = exp(dt_t a) h_{t-1} + dt_t b_t x_t; y_t = c_t.h_t.
+
+    x, dt: (B, L, Di); b_in, c_in: (B, L, Ds); a: (Di, Ds).
+    Sequential scan over chunks; within a chunk an associative scan keeps
+    the (B, Q, Di, Ds) state tensor transient.
+    """
+    bsz, l, di = x.shape
+    ds = a.shape[1]
+    q = min(chunk, l)
+    nq = -(-l // q)
+    pad = nq * q - l
+    if pad:
+        x, dt = (jnp.pad(v, ((0, 0), (0, pad), (0, 0))) for v in (x, dt))
+        b_in, c_in = (jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+                      for v in (b_in, c_in))
+
+    xs = x.reshape(bsz, nq, q, di).transpose(1, 0, 2, 3)
+    dts = dt.reshape(bsz, nq, q, di).transpose(1, 0, 2, 3)
+    bs = b_in.reshape(bsz, nq, q, ds).transpose(1, 0, 2, 3)
+    cs = c_in.reshape(bsz, nq, q, ds).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq = inp                       # (B, Q, ...)
+        decay = jnp.exp(dtq[..., None] * a)         # (B, Q, Di, Ds)
+        inject = (dtq * xq)[..., None] * bq[:, :, None, :]
+
+        def assoc(e1, e2):
+            a1, u1 = e1
+            a2, u2 = e2
+            return a1 * a2, a2 * u1 + u2
+
+        dec_c, inj_c = jax.lax.associative_scan(assoc, (decay, inject), axis=1)
+        hq = dec_c * h[:, None] + inj_c             # (B, Q, Di, Ds)
+        y = jnp.einsum("bqds,bqs->bqd", hq, cq)
+        return hq[:, -1], y
+
+    h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+    # checkpoint the chunk body: its backward recomputes the (B, Q, Di, Ds)
+    # decay/inject tensors per chunk INSIDE the sequential scan — bounding
+    # live memory to one chunk (XLA cannot hoist across while iterations).
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                             (xs, dts, bs, cs))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, nq * q, di)
+    return y[:, :l], h_fin
+
+
+def mamba_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
+                  chunk: int = 256, shard_fn=None,
+                  return_state: bool = False, state_dtype=jnp.bfloat16):
+    """x: (B, L, D) -> (B, L, D). The recurrence is sequential over L, so
+    inside the block the sequence is GATHERED and d_inner is sharded over
+    the model axis instead (DESIGN.md §4 — TP for SSM blocks)."""
+    di, ds, dr = _d_inner(cfg), cfg.ssm.d_state, _dt_rank(cfg)
+    xz = x @ p["w_in"]
+    if shard_fn is not None:
+        xz = shard_fn(xz, ("batch", None, "d_ff"))
+    xm_pre, z = jnp.split(xz, 2, axis=-1)
+    xm = conv1d_depthwise_gfid(xm_pre, p["conv_w"], causal=True) + p["conv_b"]
+    xm = jax.nn.silu(xm)
+
+    proj = xm @ p["w_x"]
+    dt_in, b_in, c_in = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["w_dt"]
+                         + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h_fin = _ssm_scan_chunked(
+        xm.astype(jnp.float32), dt, b_in.astype(jnp.float32),
+        c_in.astype(jnp.float32), a, chunk)
+    y = y + xm.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if return_state:
+        conv_tail = xm_pre[:, -(cfg.ssm.d_conv - 1):, :].astype(state_dtype)
+        return out, {"conv": conv_tail, "h": h_fin}
+    return out
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    di, ds = _d_inner(cfg), cfg.ssm.d_state
+    return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+            "h": jnp.zeros((batch, di, ds), jnp.float32)}
+
+
+def mamba_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
+                 ) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, D); O(1) recurrent update."""
+    di, ds, dr = _d_inner(cfg), cfg.ssm.d_state, _dt_rank(cfg)
+    xz = x[:, 0] @ p["w_in"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate(
+        [state["conv"], xm[:, None].astype(state["conv"].dtype)], axis=1)
+    taps = p["conv_w"]                          # (W_f, Di)
+    xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                    taps.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)
+
+    proj = xc @ p["w_x"]
+    dt_in, b_in, c_in = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["w_dt"] + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * a)          # (B, Di, Ds)
+    h = (decay * state["h"]
+         + (dt * xc.astype(jnp.float32))[..., None]
+         * b_in.astype(jnp.float32)[:, None, :])
+    y = jnp.einsum("bds,bs->bd", h, c_in.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["w_out"])[:, None]
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    h = cfg.n_heads
+    return {
+        "w_up": ParamDef((d, 2 * di), (D_MODEL, D_FF)),
+        "conv_w": ParamDef((cfg.ssm.d_conv, di), (CONV, D_FF), scale=0.5),
+        "conv_b": ParamDef((di,), (D_FF,), "zeros"),
+        "wq": ParamDef((di, di), (D_FF, None)),
+        "wk": ParamDef((di, di), (D_FF, None)),
+        "wv": ParamDef((di, di), (D_FF, None)),
+        "w_if": ParamDef((di, 2 * h), (D_FF, None), scale=0.02),
+        "b_if": ParamDef((2 * h,), (None,), "zeros"),
+        "norm": ParamDef((di,), (D_FF,), "ones"),       # per-head groupnorm
+        "w_down": ParamDef((di, d), (D_FF, D_MODEL)),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, i_raw, lf, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q, k, v: (B, H, L, Dh); i_raw (log input gate argument), lf (log forget
+    gate = logsigmoid(f_raw)): (B, H, L). Returns h: (B, H, L, Dh).
+    """
+    b, h, l, dh = q.shape
+    qchunk = min(chunk, l)
+    nq = -(-l // qchunk)
+    pad = nq * qchunk - l
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                   for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+
+    def to_chunks(t):
+        return t.reshape(b, h, nq, qchunk, *t.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, t.ndim + 1))
+
+    qs, ks, vs = map(to_chunks, (q, k, v))
+    is_, lfs = map(to_chunks, (i_raw, lf))
+    scale = 1.0 / math.sqrt(dh)
+
+    def step(carry, inp):
+        c0, n0, m0 = carry                       # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qq, kk, vv, ii, ff = inp
+        bcum = jnp.cumsum(ff, axis=-1)           # (B,H,Q) inclusive
+        # D[j,l] = b_j - b_l + i_l  (l <= j)
+        dmat = bcum[..., :, None] - bcum[..., None, :] + ii[..., None, :]
+        tri = jnp.tril(jnp.ones((qchunk, qchunk), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        m_intra = dmat.max(axis=-1)              # (B,H,Q)
+        m_j = jnp.maximum(bcum + m0[..., None], m_intra)
+
+        w_intra = jnp.exp(dmat - m_j[..., None])             # (B,H,Q,Q)
+        s = jnp.einsum("bhqd,bhld->bhql", qq, kk) * scale
+        num = jnp.einsum("bhql,bhld->bhqd", w_intra * s, vv)
+        den = jnp.einsum("bhql,bhl->bhq", w_intra * s,
+                         jnp.ones((b, h, qchunk)))
+        # inter-chunk contribution
+        dec = jnp.exp(bcum + m0[..., None] - m_j)            # (B,H,Q)
+        num = num + dec[..., None] * jnp.einsum("bhqd,bhde->bhqe", qq, c0) * scale
+        den = den + dec * jnp.einsum("bhqd,bhd->bhq", qq, n0) * scale
+        hh = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+
+        # carry update (state at j = Q-1)
+        b_end = bcum[..., -1]
+        m_end = m_j[..., -1]
+        w_end = jnp.exp(bcum[..., -1:] - bcum + ii - m_end[..., None])
+        c1 = (jnp.exp(b_end + m0 - m_end)[..., None, None] * c0
+              + jnp.einsum("bhl,bhld,bhle->bhde", w_end, kk * scale, vv))
+        n1 = (jnp.exp(b_end + m0 - m_end)[..., None] * n0
+              + jnp.einsum("bhl,bhld->bhd", w_end, kk * scale))
+        return (c1, n1, m_end), hh
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    fin, hs = jax.lax.scan(jax.checkpoint(step), (c0, n0, m0),
+                           (qs, ks, vs, is_, lfs))
+    out = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, nq * qchunk, dh)
+    return out[:, :, :l], fin
+
+
+def mlstm_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
+                  chunk: int = 256, return_state: bool = False,
+                  state_dtype=jnp.bfloat16):
+    b, l, d = x.shape
+    h = cfg.n_heads
+    di = cfg.ssm.expand * d
+    dh = di // h
+    xz = x @ p["w_up"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(conv1d_depthwise_gfid(xm, p["conv_w"]) + p["conv_b"])
+
+    def heads(t):
+        return t.reshape(b, l, h, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q, k = heads(xc @ p["wq"]), heads(xc @ p["wk"])
+    v = heads(xm @ p["wv"])
+    gates = (xc @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    i_raw = gates[..., :h].transpose(0, 2, 1)
+    lf = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1)
+    hh, (c_f, n_f, m_f) = _mlstm_core_chunked(q, k, v, i_raw, lf, chunk)
+    hh = hh.transpose(0, 2, 1, 3).reshape(b, l, di).astype(x.dtype)
+    hh = _group_rms_norm(hh, p["norm"], h, cfg.norm_eps)
+    out = (hh * jax.nn.silu(z)) @ p["w_down"]
+    if return_state:
+        conv_tail = xm[:, -(cfg.ssm.d_conv - 1):, :].astype(state_dtype)
+        return out, {"conv": conv_tail, "c": c_f, "n": n_f, "m": m_f}
+    return out
+
+
+def _group_rms_norm(x, scale, n_groups, eps):
+    b, l, d = x.shape
+    xg = x.reshape(b, l, n_groups, d // n_groups).astype(jnp.float32)
+    var = jnp.mean(xg * xg, axis=-1, keepdims=True)
+    xg = xg * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, l, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    di = cfg.ssm.expand * cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+            "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
+                 ) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    h = cfg.n_heads
+    di = cfg.ssm.expand * cfg.d_model
+    dh = di // h
+    xz = x[:, 0] @ p["w_up"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate(
+        [state["conv"], xm[:, None].astype(state["conv"].dtype)], axis=1)
+    xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xc = jax.nn.silu(xc).astype(x.dtype)
+
+    def heads(t):
+        return t.reshape(b, h, dh).astype(jnp.float32)
+
+    q, k = heads(xc @ p["wq"]), heads(xc @ p["wk"])
+    v = heads(xm @ p["wv"])
+    gates = (xc @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    i_raw, f_raw = gates[..., :h], gates[..., h:]
+    lf = jax.nn.log_sigmoid(f_raw)
+    scale = 1.0 / math.sqrt(dh)
+
+    m_new = jnp.maximum(lf + state["m"], i_raw)
+    dec = jnp.exp(lf + state["m"] - m_new)[..., None]
+    inp = jnp.exp(i_raw - m_new)[..., None]
+    c = dec[..., None] * state["c"] + inp[..., None] * (k * scale)[..., None] \
+        * v[..., None, :]
+    n = dec * state["n"] + inp * (k * scale)
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    hh = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hh = hh.reshape(b, 1, di).astype(x.dtype)
+    hh = _group_rms_norm(hh, p["norm"], h, cfg.norm_eps)
+    out = (hh * jax.nn.silu(z)[:, None]) @ p["w_down"]
+    return out, {"conv": window[:, 1:], "c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, recurrent with block-diagonal R)
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    dff = int(d * 4 / 3 / 64) * 64 * 2 or 2 * d  # paper's 4/3 gated MLP
+    return {
+        "conv_w": ParamDef((cfg.ssm.d_conv, d), (CONV, D_MODEL), scale=0.5),
+        "conv_b": ParamDef((d,), (D_MODEL,), "zeros"),
+        "w_gates": ParamDef((d, 4 * d), (D_MODEL, None)),
+        "r_gates": ParamDef((h, dh, 4 * dh), (HEADS, None, None), scale=0.02),
+        "b_gates": ParamDef((4 * d,), (None,), "zeros"),
+        "norm": ParamDef((d,), (D_MODEL,), "ones"),
+        "w_up": ParamDef((d, dff), (D_MODEL, D_FF)),
+        "w_down": ParamDef((dff // 2, d), (D_FF, D_MODEL)),
+    }
+
+
+def _slstm_step(p, cfg, carry, zifo):
+    """One recurrence step. zifo: (B, 4, H, Dh) pre-activations (no R term)."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    hh = cfg.n_heads
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r_gates"].astype(jnp.float32))
+    rec = rec.reshape(*h_prev.shape[:2], 4, -1).transpose(0, 2, 1, 3)
+    z_r, i_r, f_r, o_r = [zifo[:, j] + rec[:, j] for j in range(4)]
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    lf = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(lf + m_prev, i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(lf + m_prev - m_new)
+    c = f_g * c_prev + i_g * z
+    n = jnp.maximum(f_g * n_prev + i_g, 1e-6)
+    h_new = o * (c / n)
+    return (h_new, c, n, m_new), h_new
+
+
+def slstm_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
+                  return_state: bool = False, state_dtype=jnp.bfloat16):
+    b, l, d = x.shape
+    hh = cfg.n_heads
+    dh = d // hh
+    xc = jax.nn.silu(conv1d_depthwise_gfid(x, p["conv_w"]) + p["conv_b"])
+    pre = (xc @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    pre = pre.reshape(b, l, 4, hh, dh).transpose(1, 0, 2, 3, 4)  # (L,B,4,H,Dh)
+
+    h0 = jnp.zeros((b, hh, dh), jnp.float32)
+    carry = (h0, h0, jnp.ones_like(h0) * 1e-6, jnp.full((b, hh, dh), -1e30))
+    step = lambda c, z: _slstm_step(p, cfg, c, z)
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, carry, pre)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, l, d).astype(x.dtype)
+    hs = _group_rms_norm(hs, p["norm"], hh, cfg.norm_eps)
+    # post up-projection (gated 4/3 MLP, part of the sLSTM block)
+    up = hs @ p["w_up"]
+    u1, u2 = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(u1) * u2) @ p["w_down"]
+    if return_state:
+        conv_tail = x[:, -(cfg.ssm.d_conv - 1):, :].astype(state_dtype)
+        return out, {"conv": conv_tail, "h": h_f, "c": c_f, "n": n_f,
+                     "m": m_f}
+    return out
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, d), dtype),
+            "h": z, "c": z, "n": z + 1e-6, "m": z - 1e30}
+
+
+def slstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
+                 ) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    hh = cfg.n_heads
+    d = cfg.d_model
+    dh = d // hh
+    window = jnp.concatenate(
+        [state["conv"], x[:, :1].astype(state["conv"].dtype)], axis=1)
+    xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xc = jax.nn.silu(xc).astype(x.dtype)
+    pre = (xc @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    pre = pre.reshape(b, 4, hh, dh)
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    (h_new, c, n, m), _ = _slstm_step(p, cfg, carry, pre)
+    hs = h_new.reshape(b, 1, d).astype(x.dtype)
+    hs = _group_rms_norm(hs, p["norm"], hh, cfg.norm_eps)
+    up = hs @ p["w_up"]
+    u1, u2 = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(u1) * u2) @ p["w_down"]
+    return out, {"conv": window[:, 1:], "h": h_new, "c": c, "n": n, "m": m}

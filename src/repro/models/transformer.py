@@ -1,0 +1,511 @@
+"""Top-level model assembly: block dispatch over layer kinds, scan over
+superblock groups (compact HLO for 40-70 layer models), full-sequence
+forward (train / prefill) and single-token decode with an explicit state
+pytree. Covers decoder LMs, the encoder-only audio arch (hubert) and the
+cross-attention VLM — one code path, different configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    CROSS_ATTN, GLOBAL_ATTN, LOCAL_ATTN, MAMBA, MLSTM, SLSTM, ModelConfig)
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    BATCH, D_MODEL, SEQ, VOCAB, DefTree, ParamDef, embed_def, embed_lookup,
+    init_tree, layer_norm, rms_norm, shape_tree, stack_defs, unembed)
+
+ATTN_KINDS = (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN)
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _norm_defs(cfg: ModelConfig, name: str) -> Dict[str, ParamDef]:
+    if cfg.use_layer_norm:
+        return {f"{name}_scale": ParamDef((cfg.d_model,), (D_MODEL,), "ones"),
+                f"{name}_bias": ParamDef((cfg.d_model,), (D_MODEL,), "zeros")}
+    return {f"{name}_scale": ParamDef(
+        (cfg.d_model,), (D_MODEL,), "zeros" if cfg.scale_plus_one_norm
+        else "ones")}
+
+
+def _apply_norm(cfg: ModelConfig, p: Dict, name: str, x: jax.Array):
+    if cfg.use_layer_norm:
+        return layer_norm(x, p[f"{name}_scale"], p[f"{name}_bias"],
+                          cfg.norm_eps)
+    return rms_norm(x, p[f"{name}_scale"], cfg.norm_eps,
+                    scale_plus_one=cfg.scale_plus_one_norm)
+
+
+def block_defs(cfg: ModelConfig, kind: str, use_moe: bool) -> DefTree:
+    defs: Dict[str, Any] = {}
+    defs.update(_norm_defs(cfg, "pre"))
+    if kind in ATTN_KINDS:
+        defs["attn"] = attn.attention_defs(cfg, kind)
+    elif kind == MAMBA:
+        defs["mamba"] = ssm.mamba_defs(cfg)
+    elif kind == MLSTM:
+        defs["mlstm"] = ssm.mlstm_defs(cfg)
+    elif kind == SLSTM:
+        defs["slstm"] = ssm.slstm_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_block_norm:
+        defs.update(_norm_defs(cfg, "post"))
+    has_ffn = cfg.d_ff > 0 or use_moe
+    if has_ffn and kind not in (MLSTM, SLSTM):
+        defs.update(_norm_defs(cfg, "pre_ffn"))
+        if use_moe:
+            defs["moe"] = moe_mod.moe_defs(cfg)
+        else:
+            defs["ffn"] = ffn_mod.ffn_defs(cfg)
+        if cfg.post_block_norm:
+            defs.update(_norm_defs(cfg, "post_ffn"))
+    return defs
+
+
+def _group_layout(cfg: ModelConfig) -> Tuple[List[Tuple[str, bool]],
+                                             List[Tuple[str, bool]]]:
+    """Static (kind, use_moe) per position: (group pattern, remainder)."""
+    kinds = cfg.layer_kinds
+    rem_n = len(cfg.remainder)
+    if cfg.remainder_first:
+        rem_idx = range(rem_n)
+        grp_idx = range(rem_n, rem_n + len(cfg.pattern))
+    else:
+        rem_idx = range(cfg.n_layers - rem_n, cfg.n_layers)
+        grp_idx = range(len(cfg.pattern))
+    group = [(kinds[i], cfg.is_moe_layer(i)) for i in grp_idx]
+    rem = [(kinds[i], cfg.is_moe_layer(i)) for i in rem_idx]
+    # stacking requires every group to share the layout — verify.
+    for g in range(cfg.n_groups):
+        base = (rem_n if cfg.remainder_first else 0) + g * len(cfg.pattern)
+        for j in range(len(cfg.pattern)):
+            assert (kinds[base + j], cfg.is_moe_layer(base + j)) == group[j], \
+                f"group layout not uniform at layer {base + j}"
+    return group, rem
+
+
+def model_defs(cfg: ModelConfig) -> DefTree:
+    group, rem = _group_layout(cfg)
+    defs: Dict[str, Any] = {}
+    defs["embed"] = embed_def(cfg.vocab_size, cfg.d_model)
+    if cfg.d_frontend:
+        defs["in_proj"] = ParamDef((cfg.d_frontend, cfg.d_model),
+                                   (None, D_MODEL))
+    if cfg.family == "audio":
+        # wav2vec2/hubert relative positional embedding: depthwise conv over
+        # the sequence — the GFID 1-D conv mode with W_f = 128.
+        w_f = 128 if cfg.d_model >= 128 else 8
+        defs["pos_conv_w"] = ParamDef((w_f, cfg.d_model), (None, D_MODEL),
+                                      scale=0.02)
+        defs["pos_conv_b"] = ParamDef((cfg.d_model,), (D_MODEL,), "zeros")
+    group_defs = {str(j): block_defs(cfg, k, m)
+                  for j, (k, m) in enumerate(group)}
+    defs["groups"] = stack_defs(group_defs, cfg.n_groups)
+    defs["rem"] = {str(j): block_defs(cfg, k, m)
+                   for j, (k, m) in enumerate(rem)}
+    defs.update(_norm_defs(cfg, "final"))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                   (D_MODEL, VOCAB))
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    return init_tree(model_defs(cfg), key, dtype)
+
+
+def param_shapes(cfg: ModelConfig):
+    return shape_tree(model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FwdContext:
+    """Runtime knobs threaded through the blocks (never traced)."""
+    mesh: Any = None
+    dp_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = None
+    remat: bool = True
+    shard_fn: Any = None            # f(x, logical_axes) -> constrained x
+    capacity_factor: float = 1.25
+
+
+def _shard(ctx: Optional[FwdContext], x: jax.Array, axes) -> jax.Array:
+    if ctx is not None and ctx.shard_fn is not None:
+        return ctx.shard_fn(x, axes)
+    return x
+
+
+def block_forward(cfg: ModelConfig, kind: str, use_moe: bool, p: Dict,
+                  x: jax.Array, positions: jax.Array,
+                  img_embeds: Optional[jax.Array],
+                  ctx: Optional[FwdContext]) -> Tuple[jax.Array, jax.Array]:
+    """One residual block. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _apply_norm(cfg, p, "pre", x)
+    if kind in ATTN_KINDS:
+        sub, _ = attn.attention_forward(
+            cfg, p["attn"], h, positions, kind, img_embeds=img_embeds,
+            shard_fn=ctx.shard_fn if ctx is not None else None)
+    elif kind == MAMBA:
+        sub = ssm.mamba_forward(
+            cfg, p["mamba"], h,
+            shard_fn=ctx.shard_fn if ctx is not None else None)
+    elif kind == MLSTM:
+        sub = ssm.mlstm_forward(cfg, p["mlstm"], h)
+    else:
+        sub = ssm.slstm_forward(cfg, p["slstm"], h)
+    if cfg.post_block_norm:
+        sub = _apply_norm(cfg, p, "post", sub)
+    x = x + sub
+    x = _shard(ctx, x, (BATCH, SEQ, None))
+
+    has_ffn = (cfg.d_ff > 0 or use_moe) and kind not in (MLSTM, SLSTM)
+    if has_ffn:
+        h = _apply_norm(cfg, p, "pre_ffn", x)
+        if use_moe:
+            mesh = ctx.mesh if ctx else None
+            sub, aux = moe_mod.moe_forward(
+                cfg, p["moe"], h, mesh=mesh,
+                dp_axes=ctx.dp_axes if ctx else None,
+                tp_axis=ctx.tp_axis if ctx else None,
+                capacity_factor=ctx.capacity_factor if ctx else 1.25)
+        else:
+            sub = ffn_mod.ffn_forward(cfg, p["ffn"], h)
+        if cfg.post_block_norm:
+            sub = _apply_norm(cfg, p, "post_ffn", sub)
+        x = x + sub
+        x = _shard(ctx, x, (BATCH, SEQ, None))
+    return x, aux
+
+
+def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict,
+                 ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """-> (x, positions, img_embeds)."""
+    if cfg.d_frontend and cfg.family == "audio":
+        x = batch["frames"] @ params["in_proj"]       # stub frontend embeds
+        from repro.core.gfid import conv1d_depthwise_gfid
+        x = x + jax.nn.gelu(
+            conv1d_depthwise_gfid(x, params["pos_conv_w"], causal=False)
+            + params["pos_conv_b"])
+        b, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    img = None
+    if cfg.n_img_tokens:
+        img = batch["image_embeds"]
+        if cfg.d_frontend:
+            img = img @ params["in_proj"]
+    return x, positions, img
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict,
+            ctx: Optional[FwdContext] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (final hidden (B,S,D), moe aux loss)."""
+    group, rem = _group_layout(cfg)
+    x, positions, img = embed_inputs(cfg, params, batch)
+    x = _shard(ctx, x, (BATCH, SEQ, None))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_block(j, kind, use_moe, p, x):
+        def body(p_, x_, pos_):
+            return block_forward(cfg, kind, use_moe, p_, x_, pos_, img, ctx)
+        if ctx is None or ctx.remat:
+            body = jax.checkpoint(body)
+        return body(p, x, positions)
+
+    def rem_pass(x, aux_total):
+        for j, (kind, use_moe) in enumerate(rem):
+            x, aux = run_block(j, kind, use_moe, params["rem"][str(j)], x)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    if cfg.remainder_first:
+        x, aux_total = rem_pass(x, aux_total)
+
+    if cfg.n_groups > 0:
+        def group_step(carry, gp):
+            x, aux_total = carry
+            for j, (kind, use_moe) in enumerate(group):
+                x, aux = run_block(j, kind, use_moe, gp[str(j)], x)
+                aux_total = aux_total + aux
+            return (x, aux_total), None
+
+        (x, aux_total), _ = jax.lax.scan(group_step, (x, aux_total),
+                                         params["groups"])
+
+    if not cfg.remainder_first:
+        x, aux_total = rem_pass(x, aux_total)
+
+    x = _apply_norm(cfg, params, "final", x)
+    return x, aux_total
+
+
+def logits_fn(cfg: ModelConfig, params: Dict, hidden: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = unembed(hidden, params["embed"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", hidden, params["lm_head"],
+                            preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Decode state (grouped layout mirroring the parameter tree)
+# ---------------------------------------------------------------------------
+# state = {"groups": {j: leaf-stacked-over-n_groups}, "rem": {j: leaf}}
+# so prefill can emit caches as scan outputs and decode can scan over the
+# same groups — keeping HLO size O(superblock) for 40-70 layer models.
+
+
+def _layer_state_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype) -> Dict:
+    if kind in (GLOBAL_ATTN, LOCAL_ATTN):
+        return attn.init_kv_cache(cfg, kind, batch, max_len, dtype)
+    if kind == CROSS_ATTN:
+        return attn.init_cross_cache(cfg, batch, dtype)
+    if kind == MAMBA:
+        return ssm.mamba_init_state(cfg, batch, dtype)
+    if kind == MLSTM:
+        return ssm.mlstm_init_state(cfg, batch, dtype)
+    return ssm.slstm_init_state(cfg, batch, dtype)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    group, rem = _group_layout(cfg)
+    g = cfg.n_groups
+    state: Dict[str, Any] = {"groups": {}, "rem": {}}
+    for j, (kind, _) in enumerate(group):
+        leaf = _layer_state_init(cfg, kind, batch, max_len, dtype)
+        state["groups"][str(j)] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (g,) + a.shape), leaf)
+    for j, (kind, _) in enumerate(rem):
+        state["rem"][str(j)] = _layer_state_init(cfg, kind, batch, max_len,
+                                                 dtype)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against the grouped state)
+# ---------------------------------------------------------------------------
+
+def _block_decode(cfg: ModelConfig, kind: str, use_moe: bool, p: Dict,
+                  st: Dict, x: jax.Array, pos: jax.Array,
+                  ) -> Tuple[jax.Array, Dict]:
+    h = _apply_norm(cfg, p, "pre", x)
+    if kind in ATTN_KINDS:
+        sub, st = attn.attention_decode(cfg, p["attn"], h, st, pos, kind)
+    elif kind == MAMBA:
+        sub, st = ssm.mamba_decode(cfg, p["mamba"], h, st)
+    elif kind == MLSTM:
+        sub, st = ssm.mlstm_decode(cfg, p["mlstm"], h, st)
+    else:
+        sub, st = ssm.slstm_decode(cfg, p["slstm"], h, st)
+    if cfg.post_block_norm:
+        sub = _apply_norm(cfg, p, "post", sub)
+    x = x + sub
+    has_ffn = (cfg.d_ff > 0 or use_moe) and kind not in (MLSTM, SLSTM)
+    if has_ffn:
+        h = _apply_norm(cfg, p, "pre_ffn", x)
+        if use_moe:
+            sub, _ = moe_mod.moe_forward_dense(cfg, p["moe"], h)
+        else:
+            sub = ffn_mod.ffn_forward(cfg, p["ffn"], h)
+        if cfg.post_block_norm:
+            sub = _apply_norm(cfg, p, "post_ffn", sub)
+        x = x + sub
+    return x, st
+
+
+def decode_step(cfg: ModelConfig, params: Dict, state: Dict,
+                tokens: jax.Array, pos: jax.Array,
+                ctx: Optional[FwdContext] = None,
+                ) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: (B, 1) int32; pos: scalar absolute position.
+    Returns (logits (B, 1, V), new state)."""
+    group, rem = _group_layout(cfg)
+    x = embed_lookup(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
+    x = _shard(ctx, x, (BATCH, None, None))
+    new_state: Dict[str, Any] = {"groups": {}, "rem": {}}
+
+    def rem_pass(x):
+        for j, (kind, use_moe) in enumerate(rem):
+            x, st = _block_decode(cfg, kind, use_moe,
+                                  params["rem"][str(j)],
+                                  state["rem"][str(j)], x, pos)
+            new_state["rem"][str(j)] = st
+        return x
+
+    if cfg.remainder_first:
+        x = rem_pass(x)
+    if cfg.n_groups > 0:
+        def step(x, inp):
+            gp, gst = inp
+            sts = {}
+            for j, (kind, use_moe) in enumerate(group):
+                x, st = _block_decode(cfg, kind, use_moe, gp[str(j)],
+                                      gst[str(j)], x, pos)
+                sts[str(j)] = st
+            return x, sts
+
+        x, new_groups = jax.lax.scan(step, x,
+                                     (params["groups"], state["groups"]))
+        new_state["groups"] = new_groups
+    if not cfg.remainder_first:
+        x = rem_pass(x)
+    x = _apply_norm(cfg, params, "final", x)
+    return logits_fn(cfg, params, x), new_state
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full sequence; caches emitted as scan outputs)
+# ---------------------------------------------------------------------------
+
+def _state_axes(a):
+    """Logical axes for a decode-state leaf: batch first, the longest
+    remaining dim treated as the cache/sequence axis."""
+    import numpy as _np
+    shape = a.shape
+    axes = [BATCH] + [None] * (len(shape) - 1)
+    if len(shape) >= 2:
+        j = int(_np.argmax(shape[1:])) + 1
+        axes[j] = SEQ if shape[j] >= 128 else "d_ff"
+    return tuple(axes)
+
+
+def _block_prefill(cfg: ModelConfig, kind: str, use_moe: bool, p: Dict,
+                   x: jax.Array, positions: jax.Array,
+                   img_embeds: Optional[jax.Array],
+                   ctx: Optional[FwdContext], max_len: int, state_dtype,
+                   ) -> Tuple[jax.Array, Dict]:
+    """One residual block + its decode-state leaf."""
+    b, s, _ = x.shape
+    h = _apply_norm(cfg, p, "pre", x)
+    if kind in ATTN_KINDS:
+        sub, kv = attn.attention_forward(
+            cfg, p["attn"], h, positions, kind, img_embeds=img_embeds,
+            shard_fn=ctx.shard_fn if ctx is not None else None)
+        if kind == CROSS_ATTN:
+            st = {"k": attn._split_heads(img_embeds @ p["attn"]["wk"],
+                                         cfg.n_kv_heads).astype(state_dtype),
+                  "v": attn._split_heads(img_embeds @ p["attn"]["wv"],
+                                         cfg.n_kv_heads).astype(state_dtype)}
+        elif cfg.mla is not None:
+            c_kv, k_rope = kv
+            st0 = attn.init_kv_cache(cfg, kind, b, max_len, state_dtype)
+            st = {"c_kv": jax.lax.dynamic_update_slice(
+                      st0["c_kv"], c_kv.astype(state_dtype), (0, 0, 0)),
+                  "k_rope": jax.lax.dynamic_update_slice(
+                      st0["k_rope"], k_rope.astype(state_dtype), (0, 0, 0))}
+        else:
+            k, v = kv
+            st0 = attn.init_kv_cache(cfg, kind, b, max_len, state_dtype)
+            cl = st0["k"].shape[1]
+            if cl < s:                       # SWA ring cache: keep the tail
+                k, v = k[:, -cl:], v[:, -cl:]
+                k = jnp.roll(k, shift=s % cl, axis=1)
+                v = jnp.roll(v, shift=s % cl, axis=1)
+            st = {"k": jax.lax.dynamic_update_slice(
+                      st0["k"], k.astype(state_dtype), (0, 0, 0, 0)),
+                  "v": jax.lax.dynamic_update_slice(
+                      st0["v"], v.astype(state_dtype), (0, 0, 0, 0))}
+    elif kind == MAMBA:
+        sub, st = ssm.mamba_forward(
+            cfg, p["mamba"], h,
+            shard_fn=ctx.shard_fn if ctx is not None else None,
+            return_state=True, state_dtype=state_dtype)
+    elif kind == MLSTM:
+        sub, st = ssm.mlstm_forward(cfg, p["mlstm"], h, return_state=True,
+                                    state_dtype=state_dtype)
+    else:
+        sub, st = ssm.slstm_forward(cfg, p["slstm"], h, return_state=True,
+                                    state_dtype=state_dtype)
+    if cfg.post_block_norm:
+        sub = _apply_norm(cfg, p, "post", sub)
+    x = x + sub
+    x = _shard(ctx, x, (BATCH, SEQ, None))
+    st = jax.tree_util.tree_map(lambda a: _shard(ctx, a, _state_axes(a)), st)
+
+    has_ffn = (cfg.d_ff > 0 or use_moe) and kind not in (MLSTM, SLSTM)
+    if has_ffn:
+        h = _apply_norm(cfg, p, "pre_ffn", x)
+        if use_moe:
+            sub, _ = moe_mod.moe_forward(
+                cfg, p["moe"], h, mesh=ctx.mesh if ctx else None,
+                dp_axes=ctx.dp_axes if ctx else None,
+                tp_axis=ctx.tp_axis if ctx else None)
+        else:
+            sub = ffn_mod.ffn_forward(cfg, p["ffn"], h)
+        if cfg.post_block_norm:
+            sub = _apply_norm(cfg, p, "post_ffn", sub)
+        x = x + sub
+        x = _shard(ctx, x, (BATCH, SEQ, None))
+    return x, st
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, max_len: int,
+            ctx: Optional[FwdContext] = None, state_dtype=jnp.bfloat16,
+            ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence prefill filling the grouped decode state.
+
+    Structured exactly like `forward`: a scan over superblock groups whose
+    per-step outputs ARE the cache slices — no unrolled layers, no
+    replicated cache temporaries. Returns (last-token logits (B, V), state).
+    """
+    group, rem = _group_layout(cfg)
+    x, positions, img = embed_inputs(cfg, params, batch)
+    x = _shard(ctx, x, (BATCH, SEQ, None))
+    state: Dict[str, Any] = {"groups": {}, "rem": {}}
+
+    def rem_pass(x):
+        for j, (kind, use_moe) in enumerate(rem):
+            x, st = _block_prefill(cfg, kind, use_moe, params["rem"][str(j)],
+                                   x, positions, img, ctx, max_len,
+                                   state_dtype)
+            state["rem"][str(j)] = st
+        return x
+
+    if cfg.remainder_first:
+        x = rem_pass(x)
+    if cfg.n_groups > 0:
+        def gstep(x, gp):
+            sts = {}
+            for j, (kind, use_moe) in enumerate(group):
+                x, st = _block_prefill(cfg, kind, use_moe, gp[str(j)], x,
+                                       positions, img, ctx, max_len,
+                                       state_dtype)
+                sts[str(j)] = st
+            return x, sts
+
+        x, groups_state = jax.lax.scan(gstep, x, params["groups"])
+        state["groups"] = groups_state
+    if not cfg.remainder_first:
+        x = rem_pass(x)
+    x = _apply_norm(cfg, params, "final", x)
+    return logits_fn(cfg, params, x[:, -1]), state

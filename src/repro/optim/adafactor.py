@@ -1,0 +1,89 @@
+"""Adafactor (factored second moment, no first moment by default).
+
+The memory-capacity optimizer for the >=100B archs (deepseek-v3-671b,
+jamba-1.5-398b): v is factored into row/col statistics for rank>=2 tensors,
+cutting optimizer state from O(params) fp32 to O(rows+cols) — this is what
+lets the 671B config fit 512 x 16 GB (DESIGN.md §6, EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8              # step-dependent: 1 - step^-decay
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def init(params, cfg: AdafactorConfig):
+    def leaf(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree_util.tree_map(leaf, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(param_specs, param_shapes, cfg: AdafactorConfig):
+    def leaf(spec, shp):
+        dims = tuple(spec) + (None,) * (len(shp.shape) - len(tuple(spec)))
+        if _factored(shp.shape):
+            return {"vr": P(*dims[:-1]), "vc": P(*(dims[:-2] + dims[-1:]))}
+        return {"v": spec}
+    specs = jax.tree_util.tree_map(leaf, param_specs, param_shapes,
+                                   is_leaf=lambda x: isinstance(x, P))
+    return {"v": specs, "count": P()}
+
+
+def update(grads, state, params, lr: jax.Array, cfg: AdafactorConfig):
+    from repro.optim.adamw import clip_by_global_norm
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-cfg.decay)
+
+    def upd(p, g, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.eps1
+        if _factored(p.shape):
+            vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+            denom = (vr / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True), cfg.eps1))[..., None] \
+                * vc[..., None, :]
+            step = gf * jax.lax.rsqrt(jnp.maximum(denom, cfg.eps1))
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            v_full = beta * v["v"] + (1 - beta) * g2
+            step = gf * jax.lax.rsqrt(jnp.maximum(v_full, cfg.eps1))
+            v_new = {"v": v_full}
+        # update clipping (RMS-based)
+        rms = jnp.sqrt(jnp.mean(step * step) + cfg.eps1)
+        step = step / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        scale = jnp.maximum(cfg.eps2, jnp.sqrt(jnp.mean(
+            p.astype(jnp.float32) ** 2)))
+        p_new = (p.astype(jnp.float32) - lr * scale * step
+                 - lr * cfg.weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_v = tdef.unflatten([o[1] for o in out])
+    return new_p, {"v": new_v, "count": count}, {"grad_norm": gnorm}

@@ -1,0 +1,79 @@
+"""AdamW with configurable moment dtype and global-norm clipping.
+
+Pure pytree functions (no optax dependency). Moment tensors inherit the
+parameter PartitionSpecs, so optimizer state is ZeRO-sharded for free
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+    clip_norm: float = 1.0
+
+
+def init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(param_specs, cfg: AdamWConfig):
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_specs, "v": param_specs, "count": P()}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def update(grads, state, params, lr: jax.Array, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return (p_new.astype(p.dtype), m_new.astype(cfg.moment_dtype),
+                v_new.astype(cfg.moment_dtype))
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, {"grad_norm": gnorm}

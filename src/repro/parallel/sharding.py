@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules -> PartitionSpecs (GSPMD).
+
+Scaling story (DESIGN.md §4): tensors carry *logical* axis names
+(models/layers.py); a `ShardingRules` table maps them to mesh axes. The
+mapper enforces two hardware realities so one rule table serves every
+(arch x mesh) cell:
+
+  * no mesh axis may appear twice in one tensor's spec — first-dim-wins
+    (e.g. MoE w_in (experts->model, d_model->data, d_ff->model-conflict->None));
+  * a dim only shards if the mesh axes divide it evenly — otherwise that dim
+    falls back to replicated (e.g. smollm's 9 heads on a 16-way model axis,
+    granite's 49155 vocab).
+
+Parallelism forms expressed purely through this table:
+  DP   batch -> (pod, data)
+  FSDP d_model of weights -> data ((pod, data) on the multi-pod mesh)
+  TP   heads / d_ff / vocab -> model
+  SP   seq of the residual stream -> model (Megatron-style sequence sharding)
+  EP   experts -> model (the shard_map all_to_all path in models/moe.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as L
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, MeshAxes]
+    dp_axes: Tuple[str, ...]        # data-parallel axes (batch)
+    tp_axis: str                    # tensor/model axis
+    fsdp_axes: Tuple[str, ...]      # weight-storage sharding axes
+
+    def lookup(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True,
+               seq_shard: bool = True) -> ShardingRules:
+    axes = mesh.axis_names
+    multi_pod = "pod" in axes
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    fsdp_axes = dp if fsdp else ()
+    rules: Dict[str, MeshAxes] = {
+        L.BATCH: dp,
+        L.SEQ: "model" if seq_shard else None,
+        L.D_MODEL: fsdp_axes or None,       # weight storage (FSDP)
+        L.D_FF: "model",
+        L.HEADS: "model",
+        L.KV_HEADS: None,
+        L.HEAD_DIM: None,
+        L.VOCAB: "model",
+        L.EXPERTS: "model",
+        L.LAYERS: None,
+        L.STATE: None,
+        L.CONV: None,
+        L.IMG: None,
+    }
+    return ShardingRules(rules=rules, dp_axes=dp, tp_axis="model",
+                         fsdp_axes=fsdp_axes)
+
+
+def _axis_size(mesh: Mesh, ax: MeshAxes) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    return int(np.prod([mesh.shape[a] for a in ax]))
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: ShardingRules, mesh: Mesh) -> P:
+    """Map logical axes to a PartitionSpec, dropping conflicts and
+    non-divisible dims."""
+    used: set = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        mesh_ax = rules.lookup(logical)
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        tup = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        if any(a in used for a in tup):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, tup) != 0:
+            # try a prefix of the axis tuple before giving up
+            ok = None
+            for cut in range(len(tup) - 1, 0, -1):
+                sub = tup[:cut]
+                if dim % _axis_size(mesh, sub) == 0 and not any(
+                        a in used for a in sub):
+                    ok = sub
+                    break
+            if ok is None:
+                out.append(None)
+                continue
+            tup = ok
+        used.update(tup)
+        out.append(tup[0] if len(tup) == 1 else tup)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(def_tree, rules: ShardingRules, mesh: Mesh):
+    """ParamDef tree -> PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda d: spec_for(d.shape, d.axes, rules, mesh),
+        def_tree, is_leaf=lambda x: isinstance(x, L.ParamDef))
+
+
+def tree_shardings(def_tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs(def_tree, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_spec(rules: ShardingRules, mesh: Mesh, shape: Sequence[int],
+                    axes: Sequence[Optional[str]]) -> P:
+    return spec_for(shape, axes, rules, mesh)
+
+
+def make_shard_fn(rules: ShardingRules, mesh: Mesh):
+    """Returns f(x, logical_axes) applying with_sharding_constraint."""
+    def fn(x, axes):
+        spec = spec_for(x.shape, axes, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return fn
+
+
+# -- decode-state specs ------------------------------------------------------
+
+def state_specs(cfg, state_shapes, rules: ShardingRules, mesh: Mesh):
+    """Sharding specs for the decode-state pytree (grouped layout: leaves
+    under "groups" carry a leading n_groups axis): layers replicated, batch
+    over dp, the long (cache sequence) axis over model."""
+    def leaf_spec(x, lead_layers: bool):
+        shape = x.shape
+        axes: list = [None] * len(shape)
+        b0 = 1 if lead_layers else 0        # dim holding batch
+        if len(shape) > b0:
+            axes[b0] = L.BATCH
+        rest = shape[b0 + 1:]
+        if rest:
+            # longest remaining dim = cache length / conv window / d_inner
+            j = int(np.argmax(rest)) + b0 + 1
+            axes[j] = L.SEQ if shape[j] >= 128 else L.D_FF
+        return spec_for(shape, axes, rules, mesh)
+
+    out = {}
+    for section, sub in state_shapes.items():
+        lead = section == "groups"
+        out[section] = jax.tree_util.tree_map(
+            lambda x, lead=lead: leaf_spec(x, lead), sub)
+    return out

@@ -1,0 +1,121 @@
+"""Serving: jitted prefill and decode steps with sharded, donated KV/SSM
+state. `build_serve_step` is what the decode_32k / long_500k dry-run cells
+lower (one new token against a seq_len cache), `build_prefill` is the
+prefill_32k cell (and the encoder forward for encoder-only archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models import layers as L
+from repro.parallel import sharding as S
+
+
+def _ns(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def decode_state_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: T.init_decode_state(cfg, batch, max_len))
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                     rules: Optional[S.ShardingRules] = None):
+    """Returns (jitted step, contract). step(params, state, tokens, pos) ->
+    (logits, state'); state donated."""
+    rules = rules or S.make_rules(mesh)
+    defs = T.model_defs(cfg)
+    param_specs = S.tree_specs(defs, rules, mesh)
+    st_shapes = decode_state_shapes(cfg, batch, max_len)
+    st_specs = S.state_specs(cfg, st_shapes, rules, mesh)
+    shard_fn = S.make_shard_fn(rules, mesh)
+    ctx = T.FwdContext(mesh=mesh, dp_axes=rules.dp_axes,
+                       tp_axis=rules.tp_axis, remat=False, shard_fn=shard_fn)
+
+    def step(params, state, tokens, pos):
+        logits, state2 = T.decode_step(cfg, params, state, tokens, pos, ctx)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return logits, tok, state2
+
+    tok_spec = S.spec_for((batch, 1), (L.BATCH, None), rules, mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, param_specs), _ns(mesh, st_specs),
+                      NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())),
+        out_shardings=(None, None, _ns(mesh, st_specs)),
+        donate_argnums=(1,))
+    contract = {"param_specs": param_specs, "state_specs": st_specs,
+                "state_shapes": st_shapes, "rules": rules, "ctx": ctx}
+    return jitted, contract
+
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                  max_len: int, rules: Optional[S.ShardingRules] = None):
+    """Prefill (or encoder forward): returns (jitted fn, contract)."""
+    rules = rules or S.make_rules(mesh)
+    defs = T.model_defs(cfg)
+    param_specs = S.tree_specs(defs, rules, mesh)
+    shard_fn = S.make_shard_fn(rules, mesh)
+    ctx = T.FwdContext(mesh=mesh, dp_axes=rules.dp_axes,
+                       tp_axis=rules.tp_axis, remat=False, shard_fn=shard_fn)
+
+    if cfg.is_encoder:
+        def fn(params, batch_in):
+            hidden, _ = T.forward(cfg, params, batch_in, ctx)
+            return T.logits_fn(cfg, params, hidden)
+    else:
+        def fn(params, batch_in):
+            return T.prefill(cfg, params, batch_in, max_len, ctx)
+
+    def batch_spec(x):
+        axes = ((L.BATCH, L.SEQ, None) if x.ndim == 3
+                else (L.BATCH,) + (None,) * (x.ndim - 1))
+        return S.spec_for(x.shape, axes, rules, mesh)
+
+    jitted_holder = {}
+
+    def jit_for(batch_shapes):
+        bspecs = jax.tree_util.tree_map(batch_spec, batch_shapes)
+        if cfg.is_encoder:
+            out_sh = None
+        else:
+            _, state_sh = jax.eval_shape(fn, T.param_shapes(cfg),
+                                         batch_shapes)
+            out_sh = (None, _ns(mesh, S.state_specs(cfg, state_sh, rules,
+                                                    mesh)))
+        return jax.jit(fn, in_shardings=(_ns(mesh, param_specs),
+                                         _ns(mesh, bspecs)),
+                       out_shardings=out_sh)
+
+    contract = {"param_specs": param_specs, "rules": rules, "ctx": ctx,
+                "jit_for": jit_for}
+    return fn, contract
+
+
+def greedy_generate(cfg: ModelConfig, params, batch_in: Dict, steps: int,
+                    max_len: int):
+    """Single-host convenience loop (examples / tests): prefill then greedy
+    decode `steps` tokens."""
+    logits, state = T.prefill(cfg, params, batch_in, max_len)
+    b = logits.shape[0]
+    pos0 = batch_in["tokens"].shape[1]
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    step_fn = jax.jit(partial(T.decode_step, cfg),
+                      donate_argnums=(1,), static_argnums=())
+    for i in range(steps - 1):
+        logits_i, state = step_fn(params, state, tok, jnp.int32(pos0 + i))
+        tok = jnp.argmax(logits_i[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

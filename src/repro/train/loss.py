@@ -1,0 +1,75 @@
+"""Losses. The LM cross-entropy is *vocab-chunked*: an online-logsumexp scan
+over slices of the embedding table, so the (B, S, V) fp32 logits tensor is
+never materialized (gemma3's 262k vocab at 1M tokens/step would be ~1 TB
+fp32 globally). Chunking over vocab — not sequence — composes with the
+sequence-sharded residual stream (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def chunked_softmax_xent(hidden: jax.Array, table: jax.Array,
+                         labels: jax.Array,
+                         mask: Optional[jax.Array] = None,
+                         logit_softcap: float = 0.0,
+                         v_chunk: int = 16384) -> jax.Array:
+    """hidden: (B, S, D); table: (V, D) (tied embedding or lm_head.T);
+    labels: (B, S) int32. Returns mean NLL over mask."""
+    v, d = table.shape
+    nv = -(-v // v_chunk)
+    pad = nv * v_chunk - v
+    tbl = jnp.pad(table, ((0, pad), (0, 0))) if pad else table
+    tbl = tbl.reshape(nv, v_chunk, d)
+    base = jnp.arange(nv) * v_chunk
+
+    def chunk(carry, tb):
+        m_run, l_run, corr = carry
+        t, b0 = tb
+        logits = jnp.einsum("bsd,vd->bsv", hidden, t,
+                            preferred_element_type=jnp.float32)
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        vidx = b0 + jnp.arange(v_chunk)
+        valid = vidx < v
+        logits = jnp.where(valid[None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m_run, logits.max(axis=-1))
+        l_new = (l_run * jnp.exp(m_run - m_new)
+                 + jnp.exp(logits - m_new[..., None]).sum(axis=-1))
+        # label logit if it falls in this chunk
+        in_chunk = (labels >= b0) & (labels < b0 + v_chunk)
+        local = jnp.clip(labels - b0, 0, v_chunk - 1)
+        lab_logit = jnp.take_along_axis(
+            logits, local[..., None], axis=-1)[..., 0]
+        corr = jnp.where(in_chunk, lab_logit, corr)
+        return (m_new, l_new, corr), None
+
+    b, s, _ = hidden.shape
+    m0 = jnp.full((b, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, s), jnp.float32)
+    c0 = jnp.zeros((b, s), jnp.float32)
+    (m_f, l_f, corr), _ = jax.lax.scan(jax.checkpoint(chunk), (m0, l0, c0),
+                                       (tbl, base))
+    logz = m_f + jnp.log(jnp.maximum(l_f, 1e-37))
+    nll = logz - corr
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(cfg: ModelConfig, params: Dict, hidden: jax.Array,
+            batch: Dict, v_chunk: int = 16384) -> jax.Array:
+    table = (params["embed"] if cfg.tie_embeddings
+             else params["lm_head"].T)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    return chunked_softmax_xent(hidden, table, labels, mask,
+                                logit_softcap=cfg.logit_softcap,
+                                v_chunk=min(v_chunk, cfg.vocab_size))

@@ -1,0 +1,157 @@
+"""The jitted training step: forward (scan-over-groups, remat) -> vocab-
+chunked CE (+ MoE aux) -> grad (optional microbatch accumulation) ->
+optional int8 error-feedback gradient compression -> AdamW/Adafactor.
+
+`build_train_step` returns (step_fn, specs) where specs carries the full
+in/out sharding contract — the multi-pod dry-run lowers exactly this
+function for every (arch x train shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models import layers as L
+from repro.optim import adafactor, adamw, schedule
+from repro.parallel import sharding as S
+from repro.train.loss import lm_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    aux_weight: float = 0.01
+    accum: int = 1                  # gradient-accumulation microbatches
+    moment_dtype: Any = jnp.float32
+    grad_compression: bool = False  # int8 EF DP sync (parallel/compression)
+    remat: bool = True
+    capacity_factor: float = 1.25
+
+
+def batch_specs(cfg: ModelConfig, rules: S.ShardingRules, mesh: Mesh,
+                batch_shapes: Dict) -> Dict:
+    def leaf(x):
+        if x.ndim == 2:
+            axes = (L.BATCH, None)          # tokens/labels: replicate seq dim
+        elif x.ndim == 3:
+            axes = (L.BATCH, L.SEQ, None)
+        else:
+            axes = (L.BATCH,) + (None,) * (x.ndim - 1)
+        return S.spec_for(x.shape, axes, rules, mesh)
+    return jax.tree_util.tree_map(leaf, batch_shapes)
+
+
+def _make_loss_fn(cfg: ModelConfig, ctx: T.FwdContext, hyper: TrainHyper):
+    def loss_fn(params, batch):
+        hidden, aux = T.forward(cfg, params, batch, ctx)
+        loss = lm_loss(cfg, params, hidden, batch)
+        total = loss + hyper.aux_weight * aux
+        return total, {"loss": loss, "aux": aux}
+    return loss_fn
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     rules: Optional[S.ShardingRules] = None,
+                     hyper: TrainHyper = TrainHyper()):
+    """Returns (train_step, contract) — contract holds specs for params /
+    opt state / batch and init helpers."""
+    rules = rules or S.make_rules(mesh)
+    defs = T.model_defs(cfg)
+    param_specs = S.tree_specs(defs, rules, mesh)
+    shard_fn = S.make_shard_fn(rules, mesh)
+    ctx = T.FwdContext(mesh=mesh, dp_axes=rules.dp_axes,
+                       tp_axis=rules.tp_axis, remat=hyper.remat,
+                       shard_fn=shard_fn,
+                       capacity_factor=hyper.capacity_factor)
+    loss_fn = _make_loss_fn(cfg, ctx, hyper)
+
+    use_adafactor = cfg.optimizer == "adafactor"
+    opt_cfg = (adafactor.AdafactorConfig() if use_adafactor
+               else adamw.AdamWConfig(moment_dtype=hyper.moment_dtype))
+    opt = adafactor if use_adafactor else adamw
+
+    def opt_init(params):
+        return opt.init(params, opt_cfg)
+
+    def opt_specs():
+        if use_adafactor:
+            return adafactor.state_specs(param_specs, T.param_shapes(cfg),
+                                         opt_cfg)
+        return adamw.state_specs(param_specs, opt_cfg)
+
+    def train_step(params, opt_state, batch, step):
+        if hyper.accum > 1:
+            def micro(carry, mb):
+                g_acc, metrics_acc = carry
+                (tot, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / hyper.accum,
+                    g_acc, grads)
+                metrics_acc = jax.tree_util.tree_map(
+                    lambda a, m: a + m / hyper.accum, metrics_acc, metrics)
+                return (g_acc, metrics_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32)}
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(hyper.accum, x.shape[0] // hyper.accum,
+                                    *x.shape[1:]), batch)
+            (grads, metrics), _ = jax.lax.scan(micro, (g0, m0), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g.astype(p.dtype), grads, params)
+        else:
+            (tot, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        if hyper.grad_compression:
+            from repro.parallel.compression import compress_tree_int8
+            grads = compress_tree_int8(grads)
+
+        lr = schedule.warmup_cosine(
+            step, peak_lr=hyper.peak_lr, warmup_steps=hyper.warmup_steps,
+            total_steps=hyper.total_steps)
+        params2, opt_state2, om = opt.update(grads, opt_state, params, lr,
+                                             opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params2, opt_state2, metrics
+
+    contract = {
+        "param_specs": param_specs,
+        "opt_specs": opt_specs(),
+        "rules": rules,
+        "ctx": ctx,
+        "opt_init": opt_init,
+        "opt_cfg": opt_cfg,
+    }
+    return train_step, contract
+
+
+def jit_train_step(cfg: ModelConfig, mesh: Mesh, train_step, contract,
+                   batch_shapes: Dict):
+    rules = contract["rules"]
+    bspecs = batch_specs(cfg, rules, mesh, batch_shapes)
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    metric_sh = NamedSharding(mesh, P())
+    return jax.jit(
+        train_step,
+        in_shardings=(ns(contract["param_specs"]), ns(contract["opt_specs"]),
+                      ns(bspecs), metric_sh),
+        out_shardings=(ns(contract["param_specs"]),
+                       ns(contract["opt_specs"]), None),
+        donate_argnums=(0, 1))

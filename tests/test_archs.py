@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of the same family runs one forward and one train step on CPU, asserting
+output shapes and no NaNs; plus prefill/decode consistency vs the full
+forward for decoder archs."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_NAMES, get_config, reduced, valid_cells
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.train import step as TS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _batch_for(cfg, key, b=2, s=24, with_labels=True):
+    k1, k2 = jax.random.split(key)
+    batch = {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(k2, (b, s), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        batch = {"frames": jax.random.normal(k1, (b, s, cfg.d_frontend))}
+        if with_labels:
+            batch["labels"] = jax.random.randint(k2, (b, s), 0,
+                                                 cfg.vocab_size)
+            batch["loss_mask"] = jax.random.bernoulli(k2, 0.3, (b, s))
+    if cfg.n_img_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            k2, (b, cfg.n_img_tokens, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+class TestArchSmoke:
+    def test_forward_shapes_no_nan(self, arch):
+        cfg = reduced(arch)
+        key = jax.random.PRNGKey(0)
+        params = T.init_params(cfg, key, jnp.float32)
+        batch = _batch_for(cfg, key, with_labels=False)
+        hidden, aux = T.forward(cfg, params, batch)
+        b = 2
+        s = 24
+        assert hidden.shape == (b, s, cfg.d_model)
+        logits = T.logits_fn(cfg, params, hidden)
+        assert logits.shape == (b, s, cfg.vocab_size)
+        assert not bool(jnp.isnan(logits).any())
+        assert math.isfinite(float(aux))
+
+    def test_train_step(self, arch):
+        cfg = reduced(arch)
+        mesh = make_host_mesh()
+        ts, contract = TS.build_train_step(
+            cfg, mesh, hyper=TS.TrainHyper(total_steps=10, warmup_steps=2))
+        key = jax.random.PRNGKey(0)
+        params = T.init_params(cfg, key, jnp.float32)
+        opt_state = contract["opt_init"](params)
+        batch = _batch_for(cfg, key, b=4, s=16)
+        shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        jitted = TS.jit_train_step(cfg, mesh, ts, contract, shapes)
+        losses = []
+        for i in range(3):
+            params, opt_state, metrics = jitted(params, opt_state, batch,
+                                                jnp.int32(i))
+            losses.append(float(metrics["loss"]))
+        assert all(math.isfinite(l) for l in losses), losses
+        assert losses[-1] < losses[0], losses
+
+    def test_full_config_dims(self, arch):
+        """The full config carries the exact assigned dimensions."""
+        cfg = get_config(arch)
+        assigned = {
+            "gemma3_27b": (62, 5376, 32, 16, 21504, 262144),
+            "smollm_135m": (30, 576, 9, 3, 1536, 49152),
+            "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+            "gemma2_27b": (46, 4608, 32, 16, 36864, 256000),
+            "granite_moe_1b": (24, 1024, 16, 8, 0, 49155),
+            "deepseek_v3_671b": (61, 7168, 128, 128, 18432, 129280),
+            "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+            "llama32_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+            "jamba15_large": (72, 8192, 64, 8, 24576, 65536),
+            "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == assigned
+        # layer pattern covers exactly n_layers
+        assert len(cfg.layer_kinds) == cfg.n_layers
+
+    def test_moe_configs(self, arch):
+        cfg = get_config(arch)
+        expected = {
+            "granite_moe_1b": (32, 8), "deepseek_v3_671b": (256, 8),
+            "jamba15_large": (16, 2)}
+        if arch in expected:
+            assert (cfg.moe.n_experts, cfg.moe.n_active) == expected[arch]
+        else:
+            assert cfg.moe is None
+
+
+DECODER_ARCHS = [a for a in ARCH_NAMES
+                 if not get_config(a).is_encoder]
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(x)) logits == full-forward logits (f32 state)."""
+    cfg = reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key, jnp.float32)
+    b, s = 2, 20
+    toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :s]}
+    if cfg.n_img_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            key, (b, cfg.n_img_tokens, cfg.d_model)) * 0.1
+    full = dict(batch)
+    full["tokens"] = toks
+    hid, _ = T.forward(cfg, params, full)
+    ref_s = T.logits_fn(cfg, params, hid[:, s - 1])
+    ref_s1 = T.logits_fn(cfg, params, hid[:, s])
+    logits_p, state = T.prefill(cfg, params, batch, max_len=s + 8,
+                                state_dtype=jnp.float32)
+    assert float(jnp.abs(logits_p - ref_s).max()) < 5e-3
+    logits_d, _ = T.decode_step(cfg, params, state, toks[:, s:s + 1],
+                                jnp.int32(s))
+    assert float(jnp.abs(logits_d[:, 0] - ref_s1).max()) < 5e-3
+
+
+def test_valid_cells_skips():
+    """DESIGN §Arch-applicability: encoder-only has no decode cells;
+    long_500k only for subquadratic archs."""
+    assert "decode_32k" not in valid_cells(get_config("hubert_xlarge"))
+    assert "long_500k" not in valid_cells(get_config("qwen3_32b"))
+    assert "long_500k" in valid_cells(get_config("xlstm_125m"))
+    assert "long_500k" in valid_cells(get_config("jamba15_large"))
+    assert "long_500k" in valid_cells(get_config("gemma3_27b"))

@@ -1,0 +1,229 @@
+"""Substrate subsystems: loss, optimizers, data pipeline, checkpointing,
+compression, sharding rules."""
+import math
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import reduced
+from repro.data import pipeline as dp
+from repro.models import layers as L
+from repro.optim import adafactor, adamw
+from repro.parallel import compression as C
+from repro.parallel import sharding as S
+from repro.train.loss import chunked_softmax_xent
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestChunkedLoss:
+    @given(v=st.integers(7, 200), vc=st.integers(3, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_direct_xent(self, v, vc):
+        key = jax.random.PRNGKey(v)
+        hidden = jax.random.normal(key, (2, 5, 16), jnp.float32)
+        table = jax.random.normal(jax.random.PRNGKey(1), (v, 16), jnp.float32)
+        labels = jax.random.randint(jax.random.PRNGKey(2), (2, 5), 0, v)
+        got = chunked_softmax_xent(hidden, table, labels, v_chunk=vc)
+        logits = hidden @ table.T
+        want = -jnp.take_along_axis(
+            jax.nn.log_softmax(logits, -1), labels[..., None], -1).mean()
+        assert float(jnp.abs(got - want)) < 1e-4
+
+    def test_mask_and_softcap(self):
+        key = jax.random.PRNGKey(0)
+        hidden = jax.random.normal(key, (2, 6, 8))
+        table = jax.random.normal(jax.random.PRNGKey(1), (33, 8))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0, 33)
+        mask = jnp.array([[1, 1, 0, 0, 1, 1], [0, 1, 1, 1, 0, 0]], bool)
+        got = chunked_softmax_xent(hidden, table, labels, mask,
+                                   logit_softcap=30.0, v_chunk=8)
+        logits = 30.0 * jnp.tanh((hidden @ table.T) / 30.0)
+        nll = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                   labels[..., None], -1)[..., 0]
+        want = (nll * mask).sum() / mask.sum()
+        assert float(jnp.abs(got - want)) < 1e-4
+
+
+class TestOptimizers:
+    def _quad_params(self):
+        return {"w": jnp.array([1.0, -2.0, 3.0]),
+                "b": jnp.ones((2, 4))}
+
+    def test_adamw_descends(self):
+        cfg = adamw.AdamWConfig(weight_decay=0.0, clip_norm=1e9)
+        params = self._quad_params()
+        state = adamw.init(params, cfg)
+        loss = lambda p: (p["w"] ** 2).sum() + (p["b"] ** 2).sum()
+        for i in range(80):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw.update(g, state, params,
+                                            jnp.float32(0.05), cfg)
+        assert float(loss(params)) < 0.5
+
+    def test_adamw_matches_reference_step(self):
+        cfg = adamw.AdamWConfig(b1=0.9, b2=0.999, eps=1e-8,
+                                weight_decay=0.0, clip_norm=1e9)
+        p = {"w": jnp.array([2.0])}
+        st_ = adamw.init(p, cfg)
+        g = {"w": jnp.array([0.5])}
+        p2, st2, _ = adamw.update(g, st_, p, jnp.float32(0.1), cfg)
+        m = 0.1 * 0.5 / (1 - 0.9)
+        v = 0.001 * 0.25 / (1 - 0.999)
+        want = 2.0 - 0.1 * m / (math.sqrt(v) + 1e-8)
+        assert float(p2["w"][0]) == pytest.approx(want, rel=1e-5)
+
+    def test_adafactor_descends_and_is_factored(self):
+        cfg = adafactor.AdafactorConfig(clip_norm=1e9)
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 6))}
+        state = adafactor.init(params, cfg)
+        assert state["v"]["w"]["vr"].shape == (8,)
+        assert state["v"]["w"]["vc"].shape == (6,)
+        loss = lambda p: (p["w"] ** 2).sum()
+        start = float(loss(params))
+        for _ in range(80):
+            g = jax.grad(loss)(params)
+            params, state, _ = adafactor.update(g, state, params,
+                                                jnp.float32(0.05), cfg)
+        assert float(loss(params)) < 0.2 * start
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(math.sqrt(1000.0), rel=1e-5)
+        assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        cfg = dp.DataConfig(seq_len=32, global_batch=4, seed=7,
+                            vocab_size=100)
+        mcfg = reduced("smollm_135m")
+        b1 = dp.lm_batch(mcfg, cfg, step=3)
+        b2 = dp.lm_batch(mcfg, cfg, step=3)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_steps_differ_and_shards_differ(self):
+        cfg = dp.DataConfig(seq_len=32, global_batch=4, n_shards=2,
+                            vocab_size=100)
+        mcfg = reduced("smollm_135m")
+        a = dp.lm_batch(mcfg, cfg, step=0, shard=0)
+        b = dp.lm_batch(mcfg, cfg, step=1, shard=0)
+        c = dp.lm_batch(mcfg, cfg, step=0, shard=1)
+        assert (a["tokens"] != b["tokens"]).any()
+        assert (a["tokens"] != c["tokens"]).any()
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = dp.DataConfig(seq_len=16, global_batch=2, vocab_size=50)
+        mcfg = reduced("smollm_135m")
+        b = dp.lm_batch(mcfg, cfg, step=0)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+    def test_learnable_structure(self):
+        """Planted bigram structure: follow-token rate ~50%."""
+        cfg = dp.DataConfig(seq_len=512, global_batch=4, vocab_size=1000)
+        t = dp.synthetic_tokens(cfg, 0, 0).astype(np.int64)
+        follow = (t[:, :-1] * 2654435761 + 12345) % 1000
+        rate = (t[:, 1:] == follow).mean()
+        assert 0.15 < rate < 0.7
+
+    def test_modality_batches(self):
+        mcfg = reduced("hubert_xlarge")
+        cfg = dp.DataConfig(seq_len=16, global_batch=2,
+                            vocab_size=mcfg.vocab_size)
+        b = dp.lm_batch(mcfg, cfg, 0)
+        assert b["frames"].shape == (2, 16, mcfg.d_frontend)
+        assert b["loss_mask"].dtype == bool
+
+
+class TestCheckpoint:
+    def _tree(self, key=0):
+        k = jax.random.PRNGKey(key)
+        return {"layer": {"w": jax.random.normal(k, (4, 6)),
+                          "b": jnp.arange(3.0)},
+                "count": jnp.int32(7)}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        tree = self._tree()
+        mgr.save(5, tree, extra={"step": 5})
+        assert mgr.latest_step() == 5
+        got = mgr.restore(5, jax.tree_util.tree_map(jnp.zeros_like, tree))
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert mgr.restore_extra(5)["step"] == 5
+
+    def test_async_and_gc(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2, async_write=True)
+        for s in (1, 2, 3):
+            mgr.save(s, self._tree(s))
+        mgr.wait()
+        assert mgr.latest_step() == 3
+        assert 1 not in mgr._complete_steps()
+
+    def test_incomplete_checkpoint_skipped(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, self._tree())
+        # simulate a crashed writer
+        (tmp_path / "step_00000009").mkdir()
+        assert mgr.latest_step() == 1
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"w": jnp.zeros((3,))})
+        with pytest.raises(ValueError):
+            mgr.restore(1, {"w": jnp.zeros((4,))})
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3
+        q, s = C.quantize_int8(x)
+        err = jnp.abs(C.dequantize_int8(q, s) - x).max()
+        assert float(err) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_reduces_bias(self):
+        g = {"w": jnp.full((64,), 0.003)}
+        e = C.init_error_state(g)
+        total_plain = jnp.zeros((64,))
+        total_ef = jnp.zeros((64,))
+        for _ in range(20):
+            total_plain += C.compress_tree_int8(g)["w"]
+            gq, e = C.compress_tree_int8(g, e)
+            total_ef += gq["w"]
+        want = 20 * 0.003
+        assert float(jnp.abs(total_ef - want).max()) \
+            < float(jnp.abs(total_plain - want).max()) + 1e-6
+
+
+class TestShardingRules:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_conflict_first_dim_wins(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = S.make_rules(mesh)
+        # (experts->model, d_model->data, d_ff->model-conflict)
+        spec = S.spec_for((16, 32, 64),
+                          (L.EXPERTS, L.D_MODEL, L.D_FF), rules, mesh)
+        assert tuple(spec) in ((("model",), ("data",), None),
+                               ("model", "data"))
+
+    def test_nondivisible_falls_back(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = S.ShardingRules(
+            rules={L.HEADS: "model"}, dp_axes=("data",), tp_axis="model",
+            fsdp_axes=("data",))
+        # pretend model axis had size 16 via a fake mesh is hard on 1 dev;
+        # the divisibility check uses mesh sizes — with size-1 axes any dim
+        # divides, so verify the conflict path instead on real meshes in
+        # tests/test_distributed.py.
+        spec = S.spec_for((9,), (L.HEADS,), rules, mesh)
+        assert len(tuple(spec)) <= 1
