@@ -105,8 +105,29 @@ def bench_train_step(emit):
         emit(f"train_step/{arch}_reduced,{t:.0f},tokens=256")
 
 
+def bench_engine_dispatch(emit):
+    """Engine-routed conv/dense across registered backends: measures the
+    plan-based dispatch layer end to end (plan cache + registry + ledger
+    off), comparing the GFID lowering against the XLA-native baseline."""
+    from repro import engine
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 56, 56, 128), jnp.float32)
+    w = jax.random.normal(key, (3, 3, 128, 128), jnp.float32)
+    xd = jax.random.normal(key, (256, 1024), jnp.float32)
+    wd = jax.random.normal(key, (1024, 1024), jnp.float32)
+    for backend in ("xla", "ref"):
+        fc = jax.jit(partial(engine.conv2d, stride=1, pad=1, backend=backend))
+        fd = jax.jit(partial(engine.dense, backend=backend))
+        emit(f"engine/conv3x3_{backend},{_time(fc, x, w):.0f},")
+        emit(f"engine/dense_1k_{backend},{_time(fd, xd, wd):.0f},")
+    plan = engine.plan_conv2d(x.shape, w.shape, 1, 1, 1, "xla")
+    emit(f"engine/plan_conv3x3,0,cycles={plan.cycles};"
+         f"eff={plan.performance_efficiency:.3f}")
+
+
 def run_all(emit=print):
     bench_gfid_conv(emit)
+    bench_engine_dispatch(emit)
     bench_flash(emit)
     bench_chunked_ce(emit)
     bench_train_step(emit)

@@ -2,6 +2,10 @@
 through the multi-mode engine and print the MMIE-projected per-layer
 analytics (Fig. 5) alongside the functional forward pass.
 
+Uses the plan-based `repro.engine` API: the forward pass is wrapped in
+`engine.tracking()`, which yields the analytic `Ledger` (identical totals
+to the legacy `MultiModeEngine` ledger).
+
   PYTHONPATH=src python examples/cnn_inference.py [--net resnet50]
 """
 import argparse
@@ -9,7 +13,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import EngineConfig, MultiModeEngine
+from repro import engine
 from repro.core.quant import ACT_FORMAT, WEIGHT_FORMAT, quantize
 from repro.models import cnn
 
@@ -36,22 +40,21 @@ def main(argv=None):
             lambda t: quantize(t, WEIGHT_FORMAT), params)
         x = quantize(x, ACT_FORMAT)
 
-    engine = MultiModeEngine(EngineConfig(backend=args.backend,
-                                          track_analytics=True))
-    logits = cnn.apply_cnn(net, params, x, engine)
+    with engine.tracking() as ledger:
+        logits = cnn.apply_cnn(net, params, x, backend=args.backend)
     print(f"{net}: logits {logits.shape}, top-1 idx "
           f"{int(jnp.argmax(logits[0]))}")
     print(f"MMIE-projected totals for batch={args.batch}:")
-    print(f"  cycles             {engine.total_cycles:,}")
-    print(f"  MACs               {engine.total_macs:,}")
-    print(f"  perf efficiency    {engine.performance_efficiency:.3f}")
-    conv_cyc = sum(r.cost_cycles for r in engine.ledger
+    print(f"  cycles             {ledger.total_cycles:,}")
+    print(f"  MACs               {ledger.total_macs:,}")
+    print(f"  perf efficiency    {ledger.performance_efficiency:.3f}")
+    conv_cyc = sum(r.cost_cycles for r in ledger
                    if r.kind != 'matmul')
-    fc_cyc = engine.total_cycles - conv_cyc
+    fc_cyc = ledger.total_cycles - conv_cyc
     print(f"  conv latency       {conv_cyc/200e6*1e3:.1f} ms @200MHz")
     print(f"  fc   latency       {fc_cyc/40e6*1e3:.2f} ms @40MHz")
     print("per-op ledger (first 12 rows):")
-    for line in engine.report().splitlines()[:13]:
+    for line in ledger.report().splitlines()[:13]:
         print("  " + line)
 
 

@@ -1,35 +1,35 @@
-"""The multi-mode inference engine (paper §4) as a composable JAX module.
+"""DEPRECATED shim — the multi-mode engine now lives in `repro.engine`.
 
-`MultiModeEngine` is the framework-wide execution contract: every dense
-compute in the repo — CNN convolutions, depthwise 1-D convs inside SSM
-blocks, attention projections, FFN / MoE expert GEMMs, LM heads — is routed
-through `engine.conv2d / conv1d_depthwise / matmul`, i.e. through the *same*
-engine operating in different modes, exactly as the MMIE chip runs both conv
-and FC layers on the same 192 PEs.
+`MultiModeEngine` (stateful dispatcher + mutable ledger + process-global
+`default_engine()` singleton) has been replaced by the functional,
+plan-based API in `repro.engine`:
 
-Dispatch policy:
-  * mode (W_f, S) is derived per call; the Table-3 schedule (N_eff, p_eff)
-    and its TPU BlockSpec analogue are attached to the returned plan;
-  * backend "pallas"  -> repro.kernels (TPU target; interpret=True on CPU),
-    backend "xla"     -> pure-JAX GFID lowering (core.gfid),
-    backend "ref"     -> XLA's native conv (baseline the paper compares
-                         against: a direct conv engine with no dataflow
-                         transform).
+    old                                   new
+    ---------------------------------     ----------------------------------
+    eng = MultiModeEngine(cfg)            (no object needed)
+    eng.conv2d(x, w, ...)                 engine.conv2d(x, w, ..., backend=b)
+    eng.matmul(x, w)                      engine.dense(x, w) / engine.matmul
+    eng.conv1d_depthwise(x, w)            engine.conv1d_depthwise(x, w)
+    eng.ledger / eng.report()             with engine.tracking() as ledger: ...
+    default_engine()                      (ambient backend: engine.using_backend)
 
-The engine also keeps a running analytic ledger (paper Eqs. 15-18) so any
-forward pass can report the MMIE-projected cycles / memory accesses /
-performance efficiency — this is how `examples/cnn_inference.py` regenerates
-Fig. 5 while actually executing the net.
+This module keeps the old names importable for one release; the class below
+is a thin veneer over `repro.engine` with identical ledger semantics (same
+record fields, same report format, same analytic totals). New code should
+not use it.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import List, Literal, Optional
+import warnings
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import analytics, gfid, modes
+from repro import engine as _engine
+from repro.engine.ledger import Ledger, OpRecord  # noqa: F401 (legacy name)
 
 Backend = Literal["pallas", "xla", "ref"]
 
@@ -42,120 +42,82 @@ class EngineConfig:
     track_analytics: bool = True
 
 
-@dataclasses.dataclass
-class OpRecord:
-    kind: str                       # "conv2d" | "conv1d_dw" | "matmul"
-    mode: modes.Mode
-    cost_cycles: int
-    cost_ma_words: int
-    macs: int
-
-
 class MultiModeEngine:
-    """Stateful dispatcher + analytic ledger. Cheap to construct; the ledger
-    is Python-side metadata only (never traced)."""
+    """Deprecated object facade over `repro.engine` (see module docstring).
+
+    The ledger is a `repro.engine.Ledger`; iteration and record fields are
+    unchanged from the legacy `OpRecord`, so existing consumers keep
+    working while they migrate to `engine.tracking()`.
+    """
 
     def __init__(self, config: Optional[EngineConfig] = None):
+        warnings.warn(
+            "MultiModeEngine is deprecated; use the functional repro.engine "
+            "API (engine.dense / engine.conv2d / engine.tracking)",
+            DeprecationWarning, stacklevel=2)
         self.config = config or EngineConfig()
-        self.ledger: List[OpRecord] = []
+        self.ledger = Ledger()
+
+    def _track(self):
+        if self.config.track_analytics:
+            return _engine.tracking(self.ledger)
+        return contextlib.nullcontext()
 
     # -- modes ------------------------------------------------------------
 
     def conv2d(self, x: jax.Array, w: jax.Array, *, stride: int = 1,
                pad: int = 0, groups: int = 1) -> jax.Array:
-        """Conv mode. x: (B,H,W,C_in) NHWC; w: (H_f,W_f,C_in/g,C_out) HWIO."""
-        h_f, w_f = int(w.shape[0]), int(w.shape[1])
-        self._record_conv(x, w, stride, pad, groups)
-        if self.config.backend == "ref":
-            return gfid.conv2d_reference(x, w, stride, pad, groups)
-        if self.config.backend == "pallas":
-            from repro.kernels import ops
-            return ops.gfid_conv2d(x, w, stride=stride, pad=pad, groups=groups,
-                                   interpret=self.config.interpret)
-        return gfid.conv2d_gfid(x, w, stride, pad, groups,
-                                accum_dtype=self.config.accum_dtype)
+        with self._track():
+            return _engine.conv2d(
+                x, w, stride=stride, pad=pad, groups=groups,
+                backend=self.config.backend,
+                accum_dtype=self.config.accum_dtype,
+                interpret=self.config.interpret)
 
     def conv1d_depthwise(self, x: jax.Array, w: jax.Array, *,
                          causal: bool = True) -> jax.Array:
-        """1-D depthwise mode (Mamba/xLSTM short conv; W_f=4, S=1, T=4)."""
-        if self.config.track_analytics:
-            w_f = int(w.shape[0])
-            mode = modes.paper_mode(w_f, 1)
-            b, l, d = x.shape
-            # Depthwise: each channel is an independent 1-D GFID row.
-            spec = analytics.ConvLayerSpec("conv1d_dw", 1, l, 1, 1, 1, w_f,
-                                           1, pad=w_f - 1)
-            cost = analytics.conv_cost(spec, mode)
-            self.ledger.append(OpRecord("conv1d_dw", mode,
-                                        cost.cycles * d * b,
-                                        cost.ma_total_words * d * b,
-                                        cost.macs * d * b))
-        if self.config.backend == "pallas":
-            from repro.kernels import ops
-            return ops.gfid_conv1d_depthwise(x, w, causal=causal,
-                                             interpret=self.config.interpret)
-        return gfid.conv1d_depthwise_gfid(x, w, causal=causal)
+        with self._track():
+            return _engine.conv1d_depthwise(
+                x, w, causal=causal, backend=self.config.backend,
+                interpret=self.config.interpret)
 
     def matmul(self, x: jax.Array, w: jax.Array) -> jax.Array:
-        """FC mode (W_f = 1): x (..., n) @ w (n, m)."""
-        if self.config.track_analytics:
-            n, m_out = int(w.shape[0]), int(w.shape[1])
-            batch = int(x.size // x.shape[-1])
-            fc = analytics.fc_cost(analytics.FCLayerSpec("fc", n, m_out))
-            self.ledger.append(OpRecord(
-                "matmul", modes.fc_mode(), fc.cycles * batch,
-                fc.ma_total_words * batch, fc.macs * batch))
-        if self.config.backend == "pallas":
-            from repro.kernels import ops
-            return ops.gfid_matmul(x, w, interpret=self.config.interpret)
-        return gfid.fc_gfid(x, w, accum_dtype=self.config.accum_dtype)
+        with self._track():
+            return _engine.dense(
+                x, w, backend=self.config.backend,
+                accum_dtype=self.config.accum_dtype, out_dtype=x.dtype,
+                interpret=self.config.interpret)
 
     # -- analytics --------------------------------------------------------
-
-    def _record_conv(self, x, w, stride, pad, groups):
-        if not self.config.track_analytics:
-            return
-        h_f, w_f, _, c_out = (int(s) for s in w.shape)
-        b, h_in, w_in, c_in = (int(s) for s in x.shape)
-        spec = analytics.ConvLayerSpec("conv2d", h_in, w_in, c_in, c_out,
-                                       h_f, w_f, stride, pad, groups)
-        cost = analytics.conv_cost(spec)
-        self.ledger.append(OpRecord("conv2d", cost.mode, cost.cycles * b,
-                                    cost.ma_total_words * b, cost.macs * b))
 
     def reset_ledger(self) -> None:
         self.ledger.clear()
 
     @property
     def total_cycles(self) -> int:
-        return sum(r.cost_cycles for r in self.ledger)
+        return self.ledger.total_cycles
 
     @property
     def total_macs(self) -> int:
-        return sum(r.macs for r in self.ledger)
+        return self.ledger.total_macs
 
     @property
     def performance_efficiency(self) -> float:
-        """MMIE-projected perf efficiency of everything executed so far."""
-        cyc = self.total_cycles
-        return self.total_macs / (modes.MMIE_NUM_PES * cyc) if cyc else 0.0
+        return self.ledger.performance_efficiency
 
     def report(self) -> str:
-        lines = ["kind,mode(Wf,S),T,cycles,ma_words,macs,uf_max"]
-        for r in self.ledger:
-            lines.append(
-                f"{r.kind},({r.mode.w_f},{r.mode.s}),{r.mode.t},"
-                f"{r.cost_cycles},{r.cost_ma_words},{r.macs},"
-                f"{analytics.utilization_factor_max(r.mode.w_f, r.mode.s):.3f}")
-        return "\n".join(lines)
+        return self.ledger.report()
 
 
 _DEFAULT: Optional[MultiModeEngine] = None
 
 
 def default_engine() -> MultiModeEngine:
-    """Process-wide engine with analytics off (hot path for LM models)."""
+    """Deprecated process-wide engine (analytics off). Prefer the ambient
+    `engine.using_backend(...)` / plain `engine.dense` calls."""
     global _DEFAULT
     if _DEFAULT is None:
-        _DEFAULT = MultiModeEngine(EngineConfig(track_analytics=False))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            _DEFAULT = MultiModeEngine(EngineConfig(track_analytics=False))
     return _DEFAULT

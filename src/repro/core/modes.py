@@ -96,11 +96,18 @@ def paper_mode(w_f: int, s: int) -> Mode:
     key = (int(w_f), int(s))
     if key in _TABLE3:
         return _TABLE3[key]
-    t = pes_per_tile(w_f, s)
     if w_f > 11:
         raise ValueError(
             f"mode (W_f={w_f}, S={s}) exceeds the 11-register weight sets of the "
             "MMIE weight generator (paper §4.1)")
+    return derived_mode(w_f, s)
+
+
+def derived_mode(w_f: int, s: int) -> Mode:
+    """Table-3 derivation rule without the 11-register weight-generator
+    guard — for planning layers the physical chip could not host (e.g.
+    hubert's 128-tap positional conv), which still need a schedule."""
+    t = pes_per_tile(w_f, s)
     pes = t if t <= 3 else 6
     virt = 6 // t if t <= 3 else 1
     return Mode(w_f, s, n_eff=MMIE_SCRATCH_ENTRIES * pes,

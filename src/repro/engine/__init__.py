@@ -1,0 +1,31 @@
+"""repro.engine — the plan-based multi-mode inference engine (paper §4).
+
+The framework-wide execution contract: every dense compute in the repo —
+CNN convolutions, depthwise 1-D convs inside SSM blocks, attention
+projections, FFN / MoE expert GEMMs, embeddings / LM heads — routes through
+`engine.conv2d / conv1d_depthwise / dense / einsum`, i.e. through the
+*same* engine operating in different modes, exactly as the MMIE chip runs
+both conv and FC layers on the same 192 PEs.
+
+Three functional pieces (all pure, jit-friendly, singleton-free):
+
+  * `EnginePlan` (plan.py)    — hashable per-op plan from shapes alone:
+    Table-3 mode, MXU tiling, analytic cost (Eqs. 15-18);
+  * backend registry (dispatch.py) — "pallas" / "xla" / "ref", extensible
+    via `register_backend`;
+  * `Ledger` + `tracking()` (ledger.py) — explicit analytics, replacing the
+    old process-global `default_engine()` singleton.
+
+Legacy `repro.core.MultiModeEngine` remains as a deprecation shim over this
+package for one release.
+"""
+from repro.engine.api import (  # noqa: F401
+    conv1d_depthwise, conv2d, default_backend, dense, einsum, matmul, proj,
+    set_default_backend, set_interpret, using_backend)
+from repro.engine.dispatch import (  # noqa: F401
+    EngineBackend, backend_names, get_backend, register_backend)
+from repro.engine.ledger import (  # noqa: F401
+    Ledger, OpRecord, is_tracking, record, tracking)
+from repro.engine.plan import (  # noqa: F401
+    EnginePlan, dense_spec, parse_einsum, plan_conv1d_depthwise, plan_conv2d,
+    plan_einsum)

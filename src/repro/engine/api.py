@@ -1,0 +1,144 @@
+"""Functional entrypoints of the multi-mode engine.
+
+One call surface for every dense op in the repo (the paper's "conv and FC
+on the same PEs" contract):
+
+    y = engine.conv2d(x, w, stride=2, pad=3)          # conv modes
+    y = engine.conv1d_depthwise(x, taps)              # 1-D short-conv mode
+    y = engine.dense(x, w)                            # FC mode, (…,n)@(n,m)
+    y = engine.einsum("ecd,edf->ecf", x, w)           # FC mode, general
+
+Every call computes a pure `EnginePlan` from the static shapes (cached),
+records it into any active `tracking()` ledger, and dispatches to the
+selected backend from the registry. Backend resolution order: the explicit
+``backend=`` argument, then the ambient `using_backend(...)` context, then
+the module default ("xla").
+
+Numerics: `accum_dtype=None` (the default for `einsum`) reproduces a plain
+`jnp.einsum` / `@` — same dot_general, same output dtype — so migrating a
+model onto the engine is bit-identical. `dense` defaults to fp32
+accumulation (`preferred_element_type=jnp.float32`), the convention of
+every parameter GEMM in `repro.models`. `out_dtype` casts the result when
+given (the legacy engine always cast back to `x.dtype`).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import dispatch, ledger as ledger_mod, plan as planlib
+
+# Ambient backend + Pallas interpret flag (CPU containers need interpret).
+_DEFAULT_BACKEND: List[str] = ["xla"]
+_INTERPRET: List[bool] = [True]
+
+
+def default_backend() -> str:
+    return _DEFAULT_BACKEND[-1]
+
+
+def set_default_backend(name: str) -> None:
+    dispatch.get_backend(name)      # validate eagerly
+    _DEFAULT_BACKEND[0] = name
+
+
+@contextlib.contextmanager
+def using_backend(name: Optional[str]) -> Iterator[None]:
+    """Ambient backend for every engine call in the block (None = no-op)."""
+    if name is None:
+        yield
+        return
+    dispatch.get_backend(name)
+    _DEFAULT_BACKEND.append(name)
+    try:
+        yield
+    finally:
+        _DEFAULT_BACKEND.pop()
+
+
+def set_interpret(interpret: bool) -> None:
+    """Whether Pallas kernels run in interpret mode (True on CPU)."""
+    _INTERPRET[0] = bool(interpret)
+
+
+def _resolve(backend: Optional[str], interpret: Optional[bool]):
+    name = backend if backend is not None else default_backend()
+    return name, (_INTERPRET[0] if interpret is None else interpret)
+
+
+# ---------------------------------------------------------------------------
+# Ops
+# ---------------------------------------------------------------------------
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
+           groups: int = 1, backend: Optional[str] = None,
+           accum_dtype=jnp.float32,
+           interpret: Optional[bool] = None) -> jax.Array:
+    """Conv mode. x: (B,H,W,C_in) NHWC; w: (H_f,W_f,C_in/g,C_out) HWIO.
+    Returns (B,H_out,W_out,C_out) in x.dtype."""
+    name, interp = _resolve(backend, interpret)
+    plan = planlib.plan_conv2d(tuple(map(int, x.shape)),
+                               tuple(map(int, w.shape)),
+                               int(stride), int(pad), int(groups), name)
+    ledger_mod.record(plan)
+    out = dispatch.get_backend(name).conv2d(
+        x, w, plan, stride=stride, pad=pad, groups=groups,
+        accum_dtype=accum_dtype, interpret=interp)
+    return out.astype(x.dtype)
+
+
+def conv1d_depthwise(x: jax.Array, w: jax.Array, *, causal: bool = True,
+                     backend: Optional[str] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """1-D depthwise mode (Mamba/xLSTM short conv). x: (B,L,D); w: (W_f,D)."""
+    name, interp = _resolve(backend, interpret)
+    plan = planlib.plan_conv1d_depthwise(tuple(map(int, x.shape)),
+                                         tuple(map(int, w.shape)), name)
+    ledger_mod.record(plan)
+    out = dispatch.get_backend(name).conv1d_depthwise(
+        x, w, plan, causal=causal, interpret=interp)
+    return out.astype(x.dtype)
+
+
+def einsum(spec: str, x: jax.Array, w: jax.Array, *,
+           backend: Optional[str] = None, accum_dtype=None,
+           out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
+    """FC mode for any two-operand dense contraction (weights second)."""
+    name, interp = _resolve(backend, interpret)
+    plan = planlib.plan_einsum(spec, tuple(map(int, x.shape)),
+                               tuple(map(int, w.shape)), name)
+    ledger_mod.record(plan)
+    structure = planlib.parse_einsum(spec, x.ndim, w.ndim)
+    out = dispatch.get_backend(name).einsum(
+        spec, x, w, plan, structure, accum_dtype=accum_dtype,
+        interpret=interp)
+    return out if out_dtype is None else out.astype(out_dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+          accum_dtype=jnp.float32, out_dtype=None,
+          interpret: Optional[bool] = None) -> jax.Array:
+    """FC mode (W_f = 1): x (..., n) @ w (n, m) -> (..., m)."""
+    return einsum(planlib.dense_spec(x.ndim), x, w, backend=backend,
+                  accum_dtype=accum_dtype, out_dtype=out_dtype,
+                  interpret=interpret)
+
+
+def proj(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """FC-mode parameter GEMM with plain-`@` numerics (`accum_dtype=None`:
+    same dot_general, same output dtype) — the drop-in replacement for
+    `x @ w` on model parameter paths."""
+    return dense(x, w, backend=backend, accum_dtype=None,
+                 interpret=interpret)
+
+
+# `matmul` mirrors the legacy `MultiModeEngine.matmul` contract exactly:
+# fp32 accumulation, result cast back to the input dtype.
+def matmul(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+           interpret: Optional[bool] = None) -> jax.Array:
+    return dense(x, w, backend=backend, accum_dtype=jnp.float32,
+                 out_dtype=x.dtype, interpret=interpret)

@@ -1,0 +1,135 @@
+"""Pluggable backend registry for the multi-mode engine.
+
+Replaces the if/elif backend chains of the old `core.engine.MultiModeEngine`
+with named, registrable backends. A backend implements the three op kinds of
+the engine against a precomputed `EnginePlan`:
+
+  * ``"xla"``    — pure-JAX GFID lowering (`core.gfid` shifted GEMMs); the
+                   default everywhere.
+  * ``"pallas"`` — `repro.kernels` Pallas TPU kernels (interpret=True on the
+                   CPU container, Mosaic on TPU).
+  * ``"ref"``    — XLA's native conv / dot: the "direct engine" baseline the
+                   paper compares the dataflow against.
+
+Third parties register alternatives with `register_backend("mine", be)` and
+select them per call (`engine.dense(..., backend="mine")`) or ambiently
+(`with engine.using_backend("mine"):`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gfid
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineBackend:
+    """One execution strategy for the engine's three op kinds.
+
+    Callables receive the already-computed `EnginePlan` so a backend can read
+    the mode / MXU tiling instead of re-deriving it. `einsum` receives the
+    literal spec plus its parsed `EinsumStructure`.
+    """
+
+    name: str
+    conv2d: Callable[..., jax.Array]
+    conv1d_depthwise: Callable[..., jax.Array]
+    einsum: Callable[..., jax.Array]
+
+
+_REGISTRY: Dict[str, EngineBackend] = {}
+
+
+def register_backend(backend: EngineBackend, *, overwrite: bool = False) -> None:
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[backend.name] = backend
+
+
+def get_backend(name: str) -> EngineBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown engine backend {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# "xla" — pure-JAX GFID shifted-GEMM lowering
+# ---------------------------------------------------------------------------
+
+def _xla_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret):
+    return gfid.conv2d_gfid(x, w, stride, pad, groups,
+                            accum_dtype=accum_dtype or jnp.float32)
+
+
+def _xla_conv1d_dw(x, w, plan, *, causal, interpret):
+    return gfid.conv1d_depthwise_gfid(x, w, causal=causal)
+
+
+def _xla_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret):
+    if accum_dtype is not None:
+        return jnp.einsum(spec, x, w, preferred_element_type=accum_dtype)
+    return jnp.einsum(spec, x, w)
+
+
+# ---------------------------------------------------------------------------
+# "ref" — XLA-native direct ops (the paper's comparison baseline)
+# ---------------------------------------------------------------------------
+
+def _ref_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret):
+    return gfid.conv2d_reference(x, w, stride, pad, groups)
+
+
+def _ref_conv1d_dw(x, w, plan, *, causal, interpret):
+    return gfid.conv1d_depthwise_xla(x, w, causal=causal)
+
+
+# ---------------------------------------------------------------------------
+# "pallas" — repro.kernels TPU kernels
+# ---------------------------------------------------------------------------
+
+def _pallas_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret):
+    from repro.kernels import ops
+    return ops.gfid_conv2d(x, w, stride=stride, pad=pad, groups=groups,
+                           interpret=interpret)
+
+
+def _pallas_conv1d_dw(x, w, plan, *, causal, interpret):
+    from repro.kernels import ops
+    return ops.gfid_conv1d_depthwise(x, w, causal=causal, interpret=interpret)
+
+
+def _pallas_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret):
+    """Canonicalize to (M, K) @ (K, N) for the blocked-GEMM kernel when the
+    contraction allows it; batched-weight specs (stacked experts) fall back
+    to the XLA lowering — the MoE grouped GEMM kernel is future work."""
+    st = structure
+    canonical = (
+        w.ndim == 2 and len(st.contract) == 1 and not st.batch
+        and st.out_labels == st.x_free + st.w_free)
+    if not canonical:
+        return _xla_einsum(spec, x, w, plan, st,
+                           accum_dtype=accum_dtype, interpret=interpret)
+    from repro.kernels import ops
+    c = st.contract[0]
+    xm = jnp.moveaxis(x, st.x_labels.index(c), -1)
+    w2 = w if st.w_labels[0] == c else w.T
+    return ops.gfid_matmul(xm, w2, interpret=interpret)
+
+
+register_backend(EngineBackend("xla", _xla_conv2d, _xla_conv1d_dw,
+                               _xla_einsum))
+register_backend(EngineBackend("ref", _ref_conv2d, _ref_conv1d_dw,
+                               _xla_einsum))
+register_backend(EngineBackend("pallas", _pallas_conv2d, _pallas_conv1d_dw,
+                               _pallas_einsum))

@@ -1,0 +1,126 @@
+"""Explicit analytic ledgers for the engine (paper Eqs. 15-18, Fig. 5).
+
+The old `MultiModeEngine` kept a mutable ledger on a process-global engine
+object — hostile to multi-model serving and confusing under jit. Here the
+ledger is an explicit object activated by a context manager:
+
+    with engine.tracking() as ledger:
+        logits = apply_model(params, x)
+    print(ledger.report())
+
+Recording happens at *call* time (eager) or *trace* time (under `jax.jit`),
+from static shapes only — a plan is pure metadata and never enters the
+jaxpr. Consequences, by design:
+
+  * a jit cache hit replays the compiled function without re-recording; run
+    the traced function once under `tracking()` (or record eagerly) to
+    price a workload — totals for one trace of a function are deterministic
+    and identical across re-traces;
+  * inside `lax.scan` the body is traced once, so a scanned block records
+    once per trace, not once per iteration.
+
+Nested `tracking()` blocks stack: every active ledger records, so an outer
+whole-serve ledger and an inner per-request ledger can coexist.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, List, Optional
+
+from repro.core import analytics, modes
+from repro.engine.plan import EnginePlan
+
+
+@dataclasses.dataclass
+class OpRecord:
+    """One executed engine op. Field names match the legacy
+    `core.engine.OpRecord` so existing ledger consumers keep working."""
+
+    kind: str                       # "conv2d" | "conv1d_dw" | "matmul" | "dense"
+    mode: modes.Mode
+    cost_cycles: int
+    cost_ma_words: int
+    macs: int
+    plan: Optional[EnginePlan] = None
+
+
+class Ledger:
+    """An append-only list of `OpRecord`s with the paper's rollups."""
+
+    def __init__(self) -> None:
+        self.records: List[OpRecord] = []
+
+    def __iter__(self) -> Iterator[OpRecord]:
+        return iter(self.records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def append(self, rec: OpRecord) -> None:
+        self.records.append(rec)
+
+    def clear(self) -> None:
+        self.records.clear()
+
+    def record_plan(self, plan: EnginePlan) -> None:
+        kind = "matmul" if plan.kind == "dense" else plan.kind
+        self.append(OpRecord(kind, plan.mode, plan.cycles, plan.ma_words,
+                             plan.macs, plan))
+
+    # -- rollups (paper Table 4 / Fig. 5) ---------------------------------
+
+    @property
+    def total_cycles(self) -> int:
+        return sum(r.cost_cycles for r in self.records)
+
+    @property
+    def total_ma_words(self) -> int:
+        return sum(r.cost_ma_words for r in self.records)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(r.macs for r in self.records)
+
+    @property
+    def performance_efficiency(self) -> float:
+        """MMIE-projected perf efficiency of everything recorded so far."""
+        cyc = self.total_cycles
+        return self.total_macs / (modes.MMIE_NUM_PES * cyc) if cyc else 0.0
+
+    def report(self) -> str:
+        lines = ["kind,mode(Wf,S),T,cycles,ma_words,macs,uf_max"]
+        for r in self.records:
+            lines.append(
+                f"{r.kind},({r.mode.w_f},{r.mode.s}),{r.mode.t},"
+                f"{r.cost_cycles},{r.cost_ma_words},{r.macs},"
+                f"{analytics.utilization_factor_max(r.mode.w_f, r.mode.s):.3f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Active-ledger stack
+# ---------------------------------------------------------------------------
+
+_ACTIVE: List[Ledger] = []
+
+
+@contextlib.contextmanager
+def tracking(ledger: Optional[Ledger] = None) -> Iterator[Ledger]:
+    """Activate a ledger for every engine op issued in the block."""
+    led = ledger if ledger is not None else Ledger()
+    _ACTIVE.append(led)
+    try:
+        yield led
+    finally:
+        _ACTIVE.remove(led)
+
+
+def is_tracking() -> bool:
+    return bool(_ACTIVE)
+
+
+def record(plan: EnginePlan) -> None:
+    """Record `plan` into every active ledger (no-op when none)."""
+    for led in _ACTIVE:
+        led.record_plan(plan)

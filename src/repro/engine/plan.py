@@ -1,0 +1,208 @@
+"""EnginePlan — the pure, hashable execution plan of one engine op.
+
+A plan is a function of *op shapes alone* (plus the static knobs stride /
+pad / groups / backend): no array data, no mutable state. That makes it
+
+  * safe to compute at trace time under `jax.jit` (shapes are static),
+  * cacheable (`functools.lru_cache` below — re-traces hit the cache),
+  * usable as a dict key / static jit argument (frozen dataclass of ints,
+    strings and `modes.Mode`),
+
+which is exactly what the old stateful `MultiModeEngine` was not. Each plan
+carries the paper-side schedule (the Table-3 mode and its analytic cost,
+Eqs. 15-18) and the TPU-side schedule (the MXU tile triple of
+`modes.mxu_tiling_for_mode`) for the op, so dispatch, analytics and any
+future tiling policy all read from one object.
+
+Einsum planning: a dense contraction `einsum(spec, x, w)` is classified per
+axis label into batch (x, w and out), contraction (x and w, not out),
+x-free and w-free dims. Its FC-mode cost is `fc_cost(n=prod(contract),
+m=prod(w_free))` scaled by every remaining x dim — identical to how the old
+engine booked `matmul` for the 2-D case, generalized to stacked-expert and
+transposed-head weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import analytics, modes
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """Everything the engine decided about one op, from shapes alone."""
+
+    kind: str                       # "conv2d" | "conv1d_dw" | "dense"
+    backend: str                    # registry name ("pallas" | "xla" | "ref" | ...)
+    mode: modes.Mode                # paper mode (W_f, S) with Table-3 schedule
+    tiling: Tuple[int, int, int]    # MXU (row_tile, k_tile, cout_tile) analogue
+    cycles: int                     # MMIE-projected cycles (batch included)
+    ma_words: int                   # MMIE memory accesses, 16-bit words
+    macs: int                       # useful multiply-accumulates
+    note: str = ""                  # plan caveats (fallbacks, decimation, ...)
+
+    @property
+    def performance_efficiency(self) -> float:
+        """Paper Fig. 5 metric: useful MACs over peak array MACs."""
+        return self.macs / (modes.MMIE_NUM_PES * self.cycles) if self.cycles \
+            else 0.0
+
+
+def _mode_for(w_f: int, s: int) -> modes.Mode:
+    """Mode lookup that tolerates filters beyond the 11-register MMIE weight
+    generator (e.g. hubert's 128-tap positional conv): such layers still get
+    the derived (N_eff, p_eff) schedule instead of a hard error."""
+    if w_f > 11:
+        return modes.derived_mode(w_f, s)
+    return modes.paper_mode(w_f, s)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def plan_conv2d(x_shape: Shape, w_shape: Shape, stride: int, pad: int,
+                groups: int, backend: str) -> EnginePlan:
+    """x: (B, H, W, C_in) NHWC; w: (H_f, W_f, C_in/g, C_out) HWIO."""
+    h_f, w_f, _, c_out = (int(v) for v in w_shape)
+    b, h_in, w_in, c_in = (int(v) for v in x_shape)
+    spec = analytics.ConvLayerSpec("conv2d", h_in, w_in, c_in, c_out,
+                                   h_f, w_f, stride, pad, groups)
+    cost = analytics.conv_cost(spec)
+    note = ""
+    if w_f <= stride:
+        note = "W_f<=S: strided-out pixels decimated, booked at S=1"
+    return EnginePlan(
+        kind="conv2d", backend=backend, mode=cost.mode,
+        tiling=modes.mxu_tiling_for_mode(cost.mode, c_in // groups, c_out),
+        cycles=cost.cycles * b, ma_words=cost.ma_total_words * b,
+        macs=cost.macs * b, note=note)
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv1d (SSM / positional short convs)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def plan_conv1d_depthwise(x_shape: Shape, w_shape: Shape,
+                          backend: str) -> EnginePlan:
+    """x: (B, L, D); w: (W_f, D). Each channel is an independent GFID row."""
+    w_f = int(w_shape[0])
+    b, l, d = (int(v) for v in x_shape)
+    mode = _mode_for(w_f, 1)
+    spec = analytics.ConvLayerSpec("conv1d_dw", 1, l, 1, 1, 1, w_f, 1,
+                                   pad=w_f - 1)
+    cost = analytics.conv_cost(spec, mode)
+    return EnginePlan(
+        kind="conv1d_dw", backend=backend, mode=mode,
+        tiling=modes.mxu_tiling_for_mode(mode, 1, d),
+        cycles=cost.cycles * d * b, ma_words=cost.ma_total_words * d * b,
+        macs=cost.macs * d * b)
+
+
+# ---------------------------------------------------------------------------
+# dense contractions (FC mode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EinsumStructure:
+    """Parsed two-operand einsum: per-axis roles, in operand order."""
+
+    x_labels: Tuple[str, ...]
+    w_labels: Tuple[str, ...]
+    out_labels: Tuple[str, ...]
+    batch: Tuple[str, ...]          # in x, w and out
+    contract: Tuple[str, ...]       # in x and w, not out
+    x_free: Tuple[str, ...]         # in x and out only
+    w_free: Tuple[str, ...]         # in w and out only
+
+
+@functools.lru_cache(maxsize=1024)
+def parse_einsum(spec: str, x_ndim: int, w_ndim: int) -> EinsumStructure:
+    """Parse `spec` for operands of the given ranks. Ellipses in the spec are
+    expanded to reserved per-position labels ("…0", "…1", ...)."""
+    if "->" not in spec:
+        raise ValueError(f"engine.einsum requires an explicit output: {spec!r}")
+    lhs, rhs = spec.split("->")
+    ops = lhs.split(",")
+    if len(ops) != 2:
+        raise ValueError(f"engine.einsum takes exactly two operands: {spec!r}")
+
+    def _splice(sub: str, ell: Tuple[str, ...]) -> Tuple[str, ...]:
+        head, tail = sub.split("...")
+        return tuple(head) + ell + tuple(tail)
+
+    def expand(sub: str, ndim: int) -> Tuple[str, ...]:
+        sub = sub.replace(" ", "")
+        if "..." in sub:
+            n_ell = ndim - len(sub.replace("...", ""))
+            if n_ell < 0:
+                raise ValueError(f"operand rank {ndim} too small for {sub!r}")
+            return _splice(sub, tuple(f"…{i}" for i in range(n_ell)))
+        if len(sub) != ndim:
+            raise ValueError(f"{sub!r} does not match operand rank {ndim}")
+        return tuple(sub)
+
+    x_labels = expand(ops[0], x_ndim)
+    w_labels = expand(ops[1], w_ndim)
+    rhs = rhs.replace(" ", "")
+    if "..." in rhs:
+        # output ellipsis carries the x-side ellipsis labels (numpy rule:
+        # broadcast dims lead; here w never carries an ellipsis).
+        n_ell = sum(1 for l in x_labels if l.startswith("…"))
+        out_labels = _splice(rhs, tuple(f"…{i}" for i in range(n_ell)))
+    else:
+        out_labels = tuple(rhs)
+
+    xs, ws, os_ = set(x_labels), set(w_labels), set(out_labels)
+    for lab in os_:
+        if lab not in xs | ws:
+            raise ValueError(f"output label {lab!r} missing from inputs: {spec!r}")
+    for lab in xs | ws:
+        if lab not in os_ and not (lab in xs and lab in ws):
+            raise ValueError(
+                f"label {lab!r} is summed within one operand — not a dense "
+                f"contraction the engine can plan: {spec!r}")
+    batch = tuple(l for l in x_labels if l in ws and l in os_)
+    contract = tuple(l for l in x_labels if l in ws and l not in os_)
+    x_free = tuple(l for l in x_labels if l not in ws)
+    w_free = tuple(l for l in w_labels if l not in xs)
+    return EinsumStructure(x_labels, w_labels, out_labels,
+                           batch, contract, x_free, w_free)
+
+
+@functools.lru_cache(maxsize=4096)
+def plan_einsum(spec: str, x_shape: Shape, w_shape: Shape,
+                backend: str) -> EnginePlan:
+    """FC-mode plan for a dense contraction `einsum(spec, x, w)`."""
+    st = parse_einsum(spec, len(x_shape), len(w_shape))
+    dims: Dict[str, int] = {}
+    for labels, shape in ((st.x_labels, x_shape), (st.w_labels, w_shape)):
+        for lab, size in zip(labels, shape):
+            if dims.setdefault(lab, int(size)) != int(size):
+                raise ValueError(
+                    f"size mismatch for {lab!r} in {spec!r}: "
+                    f"{dims[lab]} vs {size}")
+    n = math.prod(dims[l] for l in st.contract) or 1
+    m = math.prod(dims[l] for l in st.w_free) or 1
+    reps = math.prod(dims[l] for l in st.batch + st.x_free) or 1
+    fc = analytics.fc_cost(analytics.FCLayerSpec("fc", n, m))
+    mode = modes.fc_mode()
+    return EnginePlan(
+        kind="dense", backend=backend, mode=mode,
+        tiling=modes.mxu_tiling_for_mode(mode, n, m),
+        cycles=fc.cycles * reps, ma_words=fc.ma_total_words * reps,
+        macs=fc.macs * reps,
+        note="" if not st.batch else
+        f"batched weights over {len(st.batch)} dim(s)")
+
+
+def dense_spec(x_ndim: int) -> str:
+    """Canonical `(…, n) @ (n, m)` spec for `engine.dense`."""
+    return "...n,nm->...m"

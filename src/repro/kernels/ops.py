@@ -22,21 +22,31 @@ from repro.kernels import gfid_matmul as _matmul
 
 def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
                 groups: int = 1, interpret: bool = True) -> jax.Array:
-    """NHWC x HWIO conv through the multi-mode engine's conv mode."""
+    """NHWC x HWIO conv through the multi-mode engine's conv mode.
+
+    Grouped convolution (AlexNet's historical 2-group layers) runs as ONE
+    batched kernel call: the group axis is stacked in front of x and w and
+    `vmap`'s pallas_call batching rule folds it into the grid, instead of
+    the old eager Python loop that emitted `groups` separate kernel launches
+    plus a concatenate.
+    """
     if pad:
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
     if groups == 1:
         out = _conv.gfid_conv2d_nhwc(x, w, stride=stride, interpret=interpret)
         return out.astype(x.dtype)
-    cg = x.shape[-1] // groups
-    og = w.shape[-1] // groups
-    outs = []
-    for g in range(groups):
-        outs.append(_conv.gfid_conv2d_nhwc(
-            x[..., g * cg:(g + 1) * cg],
-            w[..., g * og:(g + 1) * og],
-            stride=stride, interpret=interpret))
-    return jnp.concatenate(outs, axis=-1).astype(x.dtype)
+    b, h_in, w_in, c_in = x.shape
+    h_f, w_f, cg, c_out = w.shape
+    og = c_out // groups
+    # (B,H,W,G*cg) -> (G,B,H,W,cg); (Hf,Wf,cg,G*og) -> (G,Hf,Wf,cg,og).
+    xg = jnp.moveaxis(x.reshape(b, h_in, w_in, groups, cg), 3, 0)
+    wg = jnp.moveaxis(w.reshape(h_f, w_f, cg, groups, og), 3, 0)
+    outs = jax.vmap(
+        lambda xv, wv: _conv.gfid_conv2d_nhwc(xv, wv, stride=stride,
+                                              interpret=interpret))(xg, wg)
+    # (G,B,Ho,Wo,og) -> (B,Ho,Wo,G*og) with groups major in C_out.
+    return jnp.moveaxis(outs, 0, 3).reshape(
+        b, outs.shape[2], outs.shape[3], c_out).astype(x.dtype)
 
 
 def gfid_matmul(x: jax.Array, w: jax.Array, *,

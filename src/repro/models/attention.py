@@ -16,6 +16,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.configs.base import ModelConfig, MLAConfig, CROSS_ATTN, LOCAL_ATTN
 from repro.models.flash import flash_attention_jnp
 from repro.models.layers import (
@@ -203,14 +204,14 @@ def attention_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
                            shard_fn=shard_fn)
     b, s, _ = x.shape
     hd = cfg.head_dim
-    q = _split_heads(x @ p["wq"], cfg.n_heads)
+    q = _split_heads(engine.proj(x, p["wq"]), cfg.n_heads)
     if kind == CROSS_ATTN:
         assert img_embeds is not None
-        k = _split_heads(img_embeds @ p["wk"], cfg.n_kv_heads)
-        v = _split_heads(img_embeds @ p["wv"], cfg.n_kv_heads)
+        k = _split_heads(engine.proj(img_embeds, p["wk"]), cfg.n_kv_heads)
+        v = _split_heads(engine.proj(img_embeds, p["wv"]), cfg.n_kv_heads)
     else:
-        k = _split_heads(x @ p["wk"], cfg.n_kv_heads)
-        v = _split_heads(x @ p["wv"], cfg.n_kv_heads)
+        k = _split_heads(engine.proj(x, p["wk"]), cfg.n_kv_heads)
+        v = _split_heads(engine.proj(x, p["wv"]), cfg.n_kv_heads)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm" if kind != CROSS_ATTN else "k_norm_cross"],
@@ -233,7 +234,7 @@ def attention_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
            softcap_val=cfg.attn_softcap)
     if chunked and shard_fn is not None:
         o = shard_fn(o, ("batch", None, "heads", None))
-    out = o.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    out = engine.proj(o.reshape(b, s, cfg.n_heads * hd), p["wo"])
     if kind == CROSS_ATTN:
         out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
         kv = None
@@ -249,18 +250,18 @@ def mla_forward(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array,
     m: MLAConfig = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
-    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
-    q = (cq @ p["wuq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    cq = rms_norm(engine.proj(x, p["wdq"]), p["q_norm"], cfg.norm_eps)
+    q = engine.proj(cq, p["wuq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    dkv = x @ p["wdkv"]
+    dkv = engine.proj(x, p["wdkv"])
     c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B,S,rope_dim)
 
-    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, m.qk_nope_head_dim)
-    v = (c_kv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    k_nope = engine.proj(c_kv, p["wuk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = engine.proj(c_kv, p["wuv"]).reshape(b, s, h, m.v_head_dim)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                   (b, s, h, m.qk_rope_head_dim))], axis=-1)
@@ -275,7 +276,7 @@ def mla_forward(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array,
     o = fn(qq, k, v, causal=not cfg.is_encoder, scale=scale)
     if chunked and shard_fn is not None:
         o = shard_fn(o, ("batch", None, "heads", None))
-    out = o.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+    out = engine.proj(o.reshape(b, s, h * m.v_head_dim), p["wo"])
     return out, (c_kv, k_rope)
 
 
@@ -311,7 +312,7 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
         return mla_decode(cfg, p, x, cache, pos)
     b = x.shape[0]
     hd = cfg.head_dim
-    q = _split_heads(x @ p["wq"], cfg.n_heads)
+    q = _split_heads(engine.proj(x, p["wq"]), cfg.n_heads)
     if kind == CROSS_ATTN:
         # K/V were computed at prefill and live in the cache unchanged.
         k, v = cache["k"], cache["v"]
@@ -319,11 +320,11 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
             q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         o = dense_attention(q, k, v, causal=False,
                             softcap_val=cfg.attn_softcap)
-        out = o.reshape(b, 1, cfg.n_heads * hd) @ p["wo"]
+        out = engine.proj(o.reshape(b, 1, cfg.n_heads * hd), p["wo"])
         out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
         return out, cache
-    k = _split_heads(x @ p["wk"], cfg.n_kv_heads)
-    v = _split_heads(x @ p["wv"], cfg.n_kv_heads)
+    k = _split_heads(engine.proj(x, p["wk"]), cfg.n_kv_heads)
+    v = _split_heads(engine.proj(x, p["wv"]), cfg.n_kv_heads)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -361,7 +362,7 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgu,bukd->bkgd", pr, cv,
                    preferred_element_type=jnp.float32)
-    out = o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype) @ p["wo"]
+    out = engine.proj(o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype), p["wo"])
     return out, {"k": ck, "v": cv}
 
 
@@ -374,13 +375,13 @@ def mla_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     m: MLAConfig = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
-    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
-    q = (cq @ p["wuq"]).reshape(b, 1, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    cq = rms_norm(engine.proj(x, p["wdq"]), p["q_norm"], cfg.norm_eps)
+    q = engine.proj(cq, p["wuq"]).reshape(b, 1, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     posv = jnp.full((b, 1), pos)
     q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
 
-    dkv = x @ p["wdkv"]
+    dkv = engine.proj(x, p["wdkv"])
     c_new, kr_new = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
     kr_new = apply_rope(kr_new, posv, cfg.rope_theta)
@@ -391,8 +392,8 @@ def mla_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
     # Absorb W_uk into q: score(t) = q_nope^T W_uk c_t + q_rope^T k_rope_t.
     wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
-    q_abs = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], wuk,
-                       preferred_element_type=jnp.float32)    # (B,H,c_rank)
+    q_abs = engine.einsum("bhd,chd->bhc", q_nope[:, 0], wuk,
+                          accum_dtype=jnp.float32)            # (B,H,c_rank)
     s = (jnp.einsum("bhc,buc->bhu", q_abs,
                     c_kv.astype(jnp.float32))
          + jnp.einsum("bhd,bud->bhu", q_rope[:, 0].astype(jnp.float32),
@@ -403,6 +404,6 @@ def mla_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     pr = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhu,buc->bhc", pr, c_kv.astype(jnp.float32))
     wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
-    o = jnp.einsum("bhc,chd->bhd", o_c, wuv)                  # (B,H,v_dim)
-    out = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    o = engine.einsum("bhc,chd->bhd", o_c, wuv)               # (B,H,v_dim)
+    out = engine.proj(o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype), p["wo"])
     return out, {"c_kv": c_kv, "k_rope": k_rope}

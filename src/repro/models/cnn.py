@@ -15,6 +15,7 @@ counting; the functional path uses the real geometry.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -22,7 +23,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import MultiModeEngine, default_engine
+from repro import engine as E
 from repro.core.analytics import ConvLayerSpec, FCLayerSpec
 
 
@@ -203,39 +204,50 @@ def _maxpool(x: jax.Array, k: int) -> jax.Array:
 
 
 def apply_cnn(name: str, params: Dict, x: jax.Array,
-              engine: Optional[MultiModeEngine] = None) -> jax.Array:
-    """Forward pass. x: (B, H, W, 3) -> logits (B, 1000)."""
-    eng = engine or default_engine()
+              engine=None, *, backend: Optional[str] = None) -> jax.Array:
+    """Forward pass through the multi-mode engine. x: (B, H, W, 3) ->
+    logits (B, 1000).
+
+    `backend` selects the engine backend ("pallas" | "xla" | "ref"); wrap
+    the call in `E.tracking()` to collect the MMIE analytics ledger. The
+    `engine` argument still accepts a legacy `core.MultiModeEngine` (its
+    backend and ledger are honored) but is deprecated.
+    """
+    if engine is not None:          # legacy shim path
+        backend = engine.config.backend
+        track = (E.tracking(engine.ledger) if engine.config.track_analytics
+                 else contextlib.nullcontext())
+    else:
+        track = contextlib.nullcontext()
     net = CNNS[name]
-    if net.kind == "plain":
-        for cd in net.convs:
-            p = params["conv"][cd.name]
-            x = eng.conv2d(x, p["w"], stride=cd.stride, pad=cd.pad,
-                           groups=cd.groups) + p["b"]
-            if cd.relu:
+    with track, E.using_backend(backend):
+        if net.kind == "plain":
+            for cd in net.convs:
+                p = params["conv"][cd.name]
+                x = E.conv2d(x, p["w"], stride=cd.stride, pad=cd.pad,
+                             groups=cd.groups) + p["b"]
+                if cd.relu:
+                    x = jax.nn.relu(x)
+                if cd.pool > 1:
+                    x = _maxpool(x, cd.pool)
+            x = x.reshape(x.shape[0], -1)
+        else:
+            x = _resnet50_body(params, x)
+            x = x.mean(axis=(1, 2))     # global average pool
+        for fd in net.fcs:
+            p = params["fc"][fd.name]
+            x = E.matmul(x, p["w"]) + p["b"]
+            if fd.relu:
                 x = jax.nn.relu(x)
-            if cd.pool > 1:
-                x = _maxpool(x, cd.pool)
-    else:
-        x = _resnet50_body(params, x, eng)
-    if net.kind == "plain":
-        x = x.reshape(x.shape[0], -1)
-    else:
-        x = x.mean(axis=(1, 2))     # global average pool
-    for fd in net.fcs:
-        p = params["fc"][fd.name]
-        x = eng.matmul(x, p["w"]) + p["b"]
-        if fd.relu:
-            x = jax.nn.relu(x)
     return x
 
 
-def _resnet50_body(params: Dict, x: jax.Array, eng: MultiModeEngine) -> jax.Array:
+def _resnet50_body(params: Dict, x: jax.Array) -> jax.Array:
     pc = params["conv"]
 
     def conv(nm, x, stride, pad):
         p = pc[nm]
-        return eng.conv2d(x, p["w"], stride=stride, pad=pad) + p["b"]
+        return E.conv2d(x, p["w"], stride=stride, pad=pad) + p["b"]
 
     x = jax.nn.relu(conv("conv1", x, 2, 3))
     x = _maxpool(jnp.pad(x, ((0, 0), (0, 1), (0, 1), (0, 0)),

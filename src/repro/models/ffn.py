@@ -1,4 +1,5 @@
-"""Dense FFN (gated SwiGLU / plain MLP) — pure FC-mode GEMMs."""
+"""Dense FFN (gated SwiGLU / plain MLP) — pure FC-mode GEMMs, routed
+through `repro.engine` (the paper's FC mode, W_f = 1)."""
 from __future__ import annotations
 
 from typing import Dict
@@ -6,6 +7,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.configs.base import ModelConfig
 from repro.models.layers import ACTIVATIONS, D_FF, D_MODEL, ParamDef
 
@@ -23,13 +25,10 @@ def ffn_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, ParamDef]:
 
 def ffn_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
     act = ACTIVATIONS[cfg.act]
-    h = jnp.einsum("...d,df->...f", x, p["w_in"],
-                   preferred_element_type=jnp.float32)
+    h = engine.dense(x, p["w_in"])
     if cfg.gated_ffn:
-        g = jnp.einsum("...d,df->...f", x, p["w_gate"],
-                       preferred_element_type=jnp.float32)
+        g = engine.dense(x, p["w_gate"])
         h = act(g) * h
     else:
         h = act(h)
-    return jnp.einsum("...f,fd->...d", h.astype(x.dtype), p["w_out"],
-                      preferred_element_type=jnp.float32).astype(x.dtype)
+    return engine.dense(h.astype(x.dtype), p["w_out"], out_dtype=x.dtype)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
+
 # Logical axis vocabulary (see parallel/sharding.py for the mesh mapping).
 BATCH, SEQ, D_MODEL, D_FF, HEADS, KV_HEADS, HEAD_DIM, VOCAB, EXPERTS, \
     LAYERS, STATE, CONV, IMG = (
@@ -167,5 +169,5 @@ def embed_lookup(table: jax.Array, tokens: jax.Array,
 
 def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
     """Logits via the tied embedding (FC mode). x: (..., D) -> (..., V)."""
-    return jnp.einsum("...d,vd->...v", x, table,
-                      preferred_element_type=jnp.float32)
+    return engine.einsum("...d,vd->...v", x, table,
+                         accum_dtype=jnp.float32)

@@ -26,8 +26,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import engine
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models.layers import ACTIVATIONS, D_FF, D_MODEL, EXPERTS, ParamDef
+
+from repro.parallel.compat import shard_map_compat as _shard_map
 
 
 def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
@@ -51,8 +54,8 @@ def router_probs(cfg: ModelConfig, p: Dict, x: jax.Array,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Top-k routing. x: (T, D) -> (weights (T,k), idx (T,k), probs (T,E))."""
     mc = cfg.moe
-    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
-                        p["router"].astype(jnp.float32))
+    logits = engine.einsum("td,de->te", x.astype(jnp.float32),
+                           p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     weights, idx = jax.lax.top_k(probs, mc.n_active)
     weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
@@ -70,25 +73,23 @@ def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int
 
 def _shared_ffn(cfg: ModelConfig, p: Dict, xt: jax.Array) -> jax.Array:
     act = ACTIVATIONS[cfg.act]
-    hs = jnp.einsum("td,df->tf", xt, p["shared_w_in"],
-                    preferred_element_type=jnp.float32)
-    gs = jnp.einsum("td,df->tf", xt, p["shared_w_gate"],
-                    preferred_element_type=jnp.float32)
-    return jnp.einsum("tf,fd->td", (act(gs) * hs).astype(xt.dtype),
-                      p["shared_w_out"],
-                      preferred_element_type=jnp.float32).astype(xt.dtype)
+    hs = engine.dense(xt, p["shared_w_in"])
+    gs = engine.dense(xt, p["shared_w_gate"])
+    return engine.dense((act(gs) * hs).astype(xt.dtype), p["shared_w_out"],
+                        out_dtype=xt.dtype)
 
 
 def _expert_gemms(cfg: ModelConfig, p: Dict, xe: jax.Array) -> jax.Array:
-    """xe: (E, C, D) -> (E, C, D) through each expert's gated FFN."""
+    """xe: (E, C, D) -> (E, C, D) through each expert's gated FFN — grouped
+    FC-mode GEMMs over the stacked expert weights."""
     act = ACTIVATIONS[cfg.act]
-    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"],
-                   preferred_element_type=jnp.float32)
-    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"],
-                   preferred_element_type=jnp.float32)
+    h = engine.einsum("ecd,edf->ecf", xe, p["w_in"],
+                      accum_dtype=jnp.float32)
+    g = engine.einsum("ecd,edf->ecf", xe, p["w_gate"],
+                      accum_dtype=jnp.float32)
     h = (act(g) * h).astype(xe.dtype)
-    return jnp.einsum("ecf,efd->ecd", h, p["w_out"],
-                      preferred_element_type=jnp.float32).astype(xe.dtype)
+    return engine.einsum("ecf,efd->ecd", h, p["w_out"],
+                         accum_dtype=jnp.float32, out_dtype=xe.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -216,8 +217,8 @@ def moe_forward_ep(cfg: ModelConfig, p: Dict, x: jax.Array, mesh,
             lambda a: P(*(None,) * a.ndim), shared_p),
     )
     out_specs = (P(dp, tp_axis, None), P())
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs)
     return fn(x, p["router"], p["w_in"], p["w_gate"], p["w_out"], shared_p)
 
 

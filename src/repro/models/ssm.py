@@ -22,8 +22,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.configs.base import ModelConfig, SSMConfig
-from repro.core.gfid import conv1d_depthwise_gfid
 from repro.models.layers import (
     CONV, D_FF, D_MODEL, HEADS, HEAD_DIM, STATE, ParamDef, rms_norm)
 
@@ -111,16 +111,16 @@ def mamba_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
     inside the block the sequence is GATHERED and d_inner is sharded over
     the model axis instead (DESIGN.md §4 — TP for SSM blocks)."""
     di, ds, dr = _d_inner(cfg), cfg.ssm.d_state, _dt_rank(cfg)
-    xz = x @ p["w_in"]
+    xz = engine.proj(x, p["w_in"])
     if shard_fn is not None:
         xz = shard_fn(xz, ("batch", None, "d_ff"))
     xm_pre, z = jnp.split(xz, 2, axis=-1)
-    xm = conv1d_depthwise_gfid(xm_pre, p["conv_w"], causal=True) + p["conv_b"]
+    xm = engine.conv1d_depthwise(xm_pre, p["conv_w"], causal=True) + p["conv_b"]
     xm = jax.nn.silu(xm)
 
-    proj = xm @ p["w_x"]
+    proj = engine.proj(xm, p["w_x"])
     dt_in, b_in, c_in = jnp.split(proj, [dr, dr + ds], axis=-1)
-    dt = jax.nn.softplus(dt_in @ p["w_dt"]
+    dt = jax.nn.softplus(engine.proj(dt_in, p["w_dt"])
                          + p["dt_bias"]).astype(jnp.float32)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
     y, h_fin = _ssm_scan_chunked(
@@ -129,7 +129,7 @@ def mamba_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
     y = y + xm.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
     y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
     y = y * jax.nn.silu(z)
-    out = y @ p["w_out"]
+    out = engine.proj(y, p["w_out"])
     if return_state:
         conv_tail = xm_pre[:, -(cfg.ssm.d_conv - 1):, :].astype(state_dtype)
         return out, {"conv": conv_tail, "h": h_fin}
@@ -146,7 +146,7 @@ def mamba_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
                  ) -> Tuple[jax.Array, Dict]:
     """x: (B, 1, D); O(1) recurrent update."""
     di, ds, dr = _d_inner(cfg), cfg.ssm.d_state, _dt_rank(cfg)
-    xz = x[:, 0] @ p["w_in"]
+    xz = engine.proj(x[:, 0], p["w_in"])
     xm, z = jnp.split(xz, 2, axis=-1)
     window = jnp.concatenate(
         [state["conv"], xm[:, None].astype(state["conv"].dtype)], axis=1)
@@ -155,9 +155,10 @@ def mamba_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
                     taps.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
     xc = jax.nn.silu(xc).astype(x.dtype)
 
-    proj = xc @ p["w_x"]
+    proj = engine.proj(xc, p["w_x"])
     dt_in, b_in, c_in = jnp.split(proj, [dr, dr + ds], axis=-1)
-    dt = jax.nn.softplus(dt_in @ p["w_dt"] + p["dt_bias"]).astype(jnp.float32)
+    dt = jax.nn.softplus(engine.proj(dt_in, p["w_dt"])
+                         + p["dt_bias"]).astype(jnp.float32)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
     decay = jnp.exp(dt[..., None] * a)          # (B, Di, Ds)
     h = (decay * state["h"]
@@ -167,7 +168,7 @@ def mamba_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
     y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
     y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
     y = y * jax.nn.silu(z)
-    out = (y @ p["w_out"])[:, None]
+    out = engine.proj(y, p["w_out"])[:, None]
     return out, {"conv": window[:, 1:], "h": h}
 
 
@@ -265,22 +266,22 @@ def mlstm_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
     h = cfg.n_heads
     di = cfg.ssm.expand * d
     dh = di // h
-    xz = x @ p["w_up"]
+    xz = engine.proj(x, p["w_up"])
     xm, z = jnp.split(xz, 2, axis=-1)
-    xc = jax.nn.silu(conv1d_depthwise_gfid(xm, p["conv_w"]) + p["conv_b"])
+    xc = jax.nn.silu(engine.conv1d_depthwise(xm, p["conv_w"]) + p["conv_b"])
 
     def heads(t):
         return t.reshape(b, l, h, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
 
-    q, k = heads(xc @ p["wq"]), heads(xc @ p["wk"])
-    v = heads(xm @ p["wv"])
-    gates = (xc @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    q, k = heads(engine.proj(xc, p["wq"])), heads(engine.proj(xc, p["wk"]))
+    v = heads(engine.proj(xm, p["wv"]))
+    gates = (engine.proj(xc, p["w_if"]) + p["b_if"]).astype(jnp.float32)
     i_raw = gates[..., :h].transpose(0, 2, 1)
     lf = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1)
     hh, (c_f, n_f, m_f) = _mlstm_core_chunked(q, k, v, i_raw, lf, chunk)
     hh = hh.transpose(0, 2, 1, 3).reshape(b, l, di).astype(x.dtype)
     hh = _group_rms_norm(hh, p["norm"], h, cfg.norm_eps)
-    out = (hh * jax.nn.silu(z)) @ p["w_down"]
+    out = engine.proj(hh * jax.nn.silu(z), p["w_down"])
     if return_state:
         conv_tail = xm[:, -(cfg.ssm.d_conv - 1):, :].astype(state_dtype)
         return out, {"conv": conv_tail, "c": c_f, "n": n_f, "m": m_f}
@@ -312,7 +313,7 @@ def mlstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
     h = cfg.n_heads
     di = cfg.ssm.expand * cfg.d_model
     dh = di // h
-    xz = x[:, 0] @ p["w_up"]
+    xz = engine.proj(x[:, 0], p["w_up"])
     xm, z = jnp.split(xz, 2, axis=-1)
     window = jnp.concatenate(
         [state["conv"], xm[:, None].astype(state["conv"].dtype)], axis=1)
@@ -323,9 +324,9 @@ def mlstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
     def heads(t):
         return t.reshape(b, h, dh).astype(jnp.float32)
 
-    q, k = heads(xc @ p["wq"]), heads(xc @ p["wk"])
-    v = heads(xm @ p["wv"])
-    gates = (xc @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    q, k = heads(engine.proj(xc, p["wq"])), heads(engine.proj(xc, p["wk"]))
+    v = heads(engine.proj(xm, p["wv"]))
+    gates = (engine.proj(xc, p["w_if"]) + p["b_if"]).astype(jnp.float32)
     i_raw, f_raw = gates[..., :h], gates[..., h:]
     lf = jax.nn.log_sigmoid(f_raw)
     scale = 1.0 / math.sqrt(dh)
@@ -341,7 +342,7 @@ def mlstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
     hh = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
     hh = hh.reshape(b, 1, di).astype(x.dtype)
     hh = _group_rms_norm(hh, p["norm"], h, cfg.norm_eps)
-    out = (hh * jax.nn.silu(z)[:, None]) @ p["w_down"]
+    out = engine.proj(hh * jax.nn.silu(z)[:, None], p["w_down"])
     return out, {"conv": window[:, 1:], "c": c, "n": n, "m": m_new}
 
 
@@ -389,8 +390,8 @@ def slstm_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
     b, l, d = x.shape
     hh = cfg.n_heads
     dh = d // hh
-    xc = jax.nn.silu(conv1d_depthwise_gfid(x, p["conv_w"]) + p["conv_b"])
-    pre = (xc @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    xc = jax.nn.silu(engine.conv1d_depthwise(x, p["conv_w"]) + p["conv_b"])
+    pre = (engine.proj(xc, p["w_gates"]) + p["b_gates"]).astype(jnp.float32)
     pre = pre.reshape(b, l, 4, hh, dh).transpose(1, 0, 2, 3, 4)  # (L,B,4,H,Dh)
 
     h0 = jnp.zeros((b, hh, dh), jnp.float32)
@@ -400,9 +401,9 @@ def slstm_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
     hs = hs.transpose(1, 0, 2, 3).reshape(b, l, d).astype(x.dtype)
     hs = _group_rms_norm(hs, p["norm"], hh, cfg.norm_eps)
     # post up-projection (gated 4/3 MLP, part of the sLSTM block)
-    up = hs @ p["w_up"]
+    up = engine.proj(hs, p["w_up"])
     u1, u2 = jnp.split(up, 2, axis=-1)
-    out = (jax.nn.gelu(u1) * u2) @ p["w_down"]
+    out = engine.proj(jax.nn.gelu(u1) * u2, p["w_down"])
     if return_state:
         conv_tail = x[:, -(cfg.ssm.d_conv - 1):, :].astype(state_dtype)
         return out, {"conv": conv_tail, "h": h_f, "c": c_f, "n": n_f,
@@ -430,13 +431,13 @@ def slstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
     xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
                     p["conv_w"].astype(jnp.float32)) + p["conv_b"]
     xc = jax.nn.silu(xc).astype(x.dtype)
-    pre = (xc @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    pre = (engine.proj(xc, p["w_gates"]) + p["b_gates"]).astype(jnp.float32)
     pre = pre.reshape(b, 4, hh, dh)
     carry = (state["h"], state["c"], state["n"], state["m"])
     (h_new, c, n, m), _ = _slstm_step(p, cfg, carry, pre)
     hs = h_new.reshape(b, 1, d).astype(x.dtype)
     hs = _group_rms_norm(hs, p["norm"], hh, cfg.norm_eps)
-    up = hs @ p["w_up"]
+    up = engine.proj(hs, p["w_up"])
     u1, u2 = jnp.split(up, 2, axis=-1)
-    out = (jax.nn.gelu(u1) * u2) @ p["w_down"]
+    out = engine.proj(jax.nn.gelu(u1) * u2, p["w_down"])
     return out, {"conv": window[:, 1:], "h": h_new, "c": c, "n": n, "m": m}

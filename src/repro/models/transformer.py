@@ -14,6 +14,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.configs.base import (
     CROSS_ATTN, GLOBAL_ATTN, LOCAL_ATTN, MAMBA, MLSTM, SLSTM, ModelConfig)
 from repro.models import attention as attn
@@ -200,10 +201,11 @@ def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict,
                  ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
     """-> (x, positions, img_embeds)."""
     if cfg.d_frontend and cfg.family == "audio":
-        x = batch["frames"] @ params["in_proj"]       # stub frontend embeds
-        from repro.core.gfid import conv1d_depthwise_gfid
+        # stub frontend embeds; the 128-tap positional conv is the GFID
+        # 1-D mode of the engine (W_f > 11 books a derived schedule).
+        x = engine.proj(batch["frames"], params["in_proj"])
         x = x + jax.nn.gelu(
-            conv1d_depthwise_gfid(x, params["pos_conv_w"], causal=False)
+            engine.conv1d_depthwise(x, params["pos_conv_w"], causal=False)
             + params["pos_conv_b"])
         b, s = x.shape[:2]
     else:
@@ -217,7 +219,7 @@ def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict,
     if cfg.n_img_tokens:
         img = batch["image_embeds"]
         if cfg.d_frontend:
-            img = img @ params["in_proj"]
+            img = engine.proj(img, params["in_proj"])
     return x, positions, img
 
 
@@ -268,8 +270,7 @@ def logits_fn(cfg: ModelConfig, params: Dict, hidden: jax.Array) -> jax.Array:
     if cfg.tie_embeddings:
         logits = unembed(hidden, params["embed"])
     else:
-        logits = jnp.einsum("...d,dv->...v", hidden, params["lm_head"],
-                            preferred_element_type=jnp.float32)
+        logits = engine.dense(hidden, params["lm_head"])
     if cfg.logit_softcap:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
     return logits
@@ -412,10 +413,12 @@ def _block_prefill(cfg: ModelConfig, kind: str, use_moe: bool, p: Dict,
             cfg, p["attn"], h, positions, kind, img_embeds=img_embeds,
             shard_fn=ctx.shard_fn if ctx is not None else None)
         if kind == CROSS_ATTN:
-            st = {"k": attn._split_heads(img_embeds @ p["attn"]["wk"],
-                                         cfg.n_kv_heads).astype(state_dtype),
-                  "v": attn._split_heads(img_embeds @ p["attn"]["wv"],
-                                         cfg.n_kv_heads).astype(state_dtype)}
+            st = {"k": attn._split_heads(
+                      engine.proj(img_embeds, p["attn"]["wk"]),
+                      cfg.n_kv_heads).astype(state_dtype),
+                  "v": attn._split_heads(
+                      engine.proj(img_embeds, p["attn"]["wv"]),
+                      cfg.n_kv_heads).astype(state_dtype)}
         elif cfg.mla is not None:
             c_kv, k_rope = kv
             st0 = attn.init_kv_cache(cfg, kind, b, max_len, state_dtype)

@@ -89,5 +89,6 @@ def dp_sync_int8(local_grads, mesh, dp_axes: Tuple[str, ...]):
         return jax.tree_util.tree_map(leaf, g)
 
     spec = jax.tree_util.tree_map(lambda _: P(), local_grads)
-    return jax.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                         check_vma=False)(local_grads)
+    from repro.parallel.compat import shard_map_compat
+    return shard_map_compat(body, mesh=mesh, in_specs=(spec,),
+                            out_specs=spec)(local_grads)

@@ -5,6 +5,7 @@ prefill_32k cell (and the encoder forward for encoder-only archs).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
@@ -13,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import engine as E
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.models import layers as L
@@ -31,9 +33,11 @@ def decode_state_shapes(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
-                     rules: Optional[S.ShardingRules] = None):
+                     rules: Optional[S.ShardingRules] = None,
+                     engine_backend: Optional[str] = None):
     """Returns (jitted step, contract). step(params, state, tokens, pos) ->
-    (logits, state'); state donated."""
+    (logits, state'); state donated. `engine_backend` selects the
+    multi-mode-engine backend for every dense op traced into the step."""
     rules = rules or S.make_rules(mesh)
     defs = T.model_defs(cfg)
     param_specs = S.tree_specs(defs, rules, mesh)
@@ -44,7 +48,9 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
                        tp_axis=rules.tp_axis, remat=False, shard_fn=shard_fn)
 
     def step(params, state, tokens, pos):
-        logits, state2 = T.decode_step(cfg, params, state, tokens, pos, ctx)
+        with E.using_backend(engine_backend):
+            logits, state2 = T.decode_step(cfg, params, state, tokens, pos,
+                                           ctx)
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return logits, tok, state2
 
@@ -61,7 +67,8 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
 
 
 def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
-                  max_len: int, rules: Optional[S.ShardingRules] = None):
+                  max_len: int, rules: Optional[S.ShardingRules] = None,
+                  engine_backend: Optional[str] = None):
     """Prefill (or encoder forward): returns (jitted fn, contract)."""
     rules = rules or S.make_rules(mesh)
     defs = T.model_defs(cfg)
@@ -72,11 +79,13 @@ def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
 
     if cfg.is_encoder:
         def fn(params, batch_in):
-            hidden, _ = T.forward(cfg, params, batch_in, ctx)
-            return T.logits_fn(cfg, params, hidden)
+            with E.using_backend(engine_backend):
+                hidden, _ = T.forward(cfg, params, batch_in, ctx)
+                return T.logits_fn(cfg, params, hidden)
     else:
         def fn(params, batch_in):
-            return T.prefill(cfg, params, batch_in, max_len, ctx)
+            with E.using_backend(engine_backend):
+                return T.prefill(cfg, params, batch_in, max_len, ctx)
 
     def batch_spec(x):
         axes = ((L.BATCH, L.SEQ, None) if x.ndim == 3
@@ -104,18 +113,22 @@ def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
 
 
 def greedy_generate(cfg: ModelConfig, params, batch_in: Dict, steps: int,
-                    max_len: int):
+                    max_len: int, ledger: Optional[E.Ledger] = None):
     """Single-host convenience loop (examples / tests): prefill then greedy
-    decode `steps` tokens."""
-    logits, state = T.prefill(cfg, params, batch_in, max_len)
-    b = logits.shape[0]
-    pos0 = batch_in["tokens"].shape[1]
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    out = [tok]
-    step_fn = jax.jit(partial(T.decode_step, cfg),
-                      donate_argnums=(1,), static_argnums=())
-    for i in range(steps - 1):
-        logits_i, state = step_fn(params, state, tok, jnp.int32(pos0 + i))
-        tok = jnp.argmax(logits_i[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out.append(tok)
+    decode `steps` tokens. Pass an `engine.Ledger` to collect the
+    MMIE-projected cost of one prefill + one decode trace."""
+    track = (E.tracking(ledger) if ledger is not None
+             else contextlib.nullcontext())
+    with track:
+        logits, state = T.prefill(cfg, params, batch_in, max_len)
+        pos0 = batch_in["tokens"].shape[1]
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        step_fn = jax.jit(partial(T.decode_step, cfg),
+                          donate_argnums=(1,), static_argnums=())
+        for i in range(steps - 1):
+            logits_i, state = step_fn(params, state, tok, jnp.int32(pos0 + i))
+            tok = jnp.argmax(logits_i[:, -1],
+                             axis=-1).astype(jnp.int32)[:, None]
+            out.append(tok)
     return jnp.concatenate(out, axis=1)

@@ -1,0 +1,225 @@
+"""The plan-based engine API (repro.engine): backend parity across the
+registry, plan purity/hashability (jit-cache stability), ledger semantics
+under tracing, and the legacy MultiModeEngine shim equivalence."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.core import EngineConfig, MultiModeEngine
+from repro.models import cnn
+
+jax.config.update("jax_platform_name", "cpu")
+
+TABLE3_MODES = [(11, 4), (7, 2), (5, 1), (3, 1), (1, 1)]
+BACKENDS = ("ref", "xla", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Backend parity
+# ---------------------------------------------------------------------------
+
+class TestBackendParity:
+    @pytest.mark.parametrize("w_f,s", TABLE3_MODES)
+    def test_conv2d_all_backends(self, w_f, s):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 23, 23, 8),
+                              jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (w_f, w_f, 8, 16),
+                              jnp.float32)
+        outs = {b: E.conv2d(x, w, stride=s, pad=w_f // 2, backend=b)
+                for b in BACKENDS}
+        for b in ("xla", "pallas"):
+            np.testing.assert_allclose(outs[b], outs["ref"], rtol=2e-4,
+                                       atol=2e-4)
+
+    def test_dense_all_backends(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 48), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (48, 32), jnp.float32)
+        outs = {b: E.dense(x, w, backend=b) for b in BACKENDS}
+        for b in ("xla", "pallas"):
+            np.testing.assert_allclose(outs[b], outs["ref"], rtol=1e-4,
+                                       atol=1e-4)
+
+    def test_conv1d_depthwise_all_backends(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 17, 6), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (4, 6), jnp.float32)
+        outs = {b: E.conv1d_depthwise(x, w, causal=True) for b in BACKENDS}
+        for b in ("xla", "pallas"):
+            np.testing.assert_allclose(outs[b], outs["ref"], rtol=1e-4,
+                                       atol=1e-4)
+
+    @pytest.mark.parametrize("spec,xs,ws", [
+        ("...d,df->...f", (2, 5, 16), (16, 24)),     # FFN in-proj
+        ("...d,vd->...v", (2, 5, 16), (40, 16)),     # tied unembed
+        ("ecd,edf->ecf", (3, 7, 16), (3, 16, 8)),    # MoE expert GEMMs
+        ("bhd,chd->bhc", (2, 4, 8), (10, 4, 8)),     # MLA absorbed W_uk
+    ])
+    def test_einsum_matches_jnp(self, spec, xs, ws):
+        x = jax.random.normal(jax.random.PRNGKey(0), xs, jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), ws, jnp.float32)
+        want = jnp.einsum(spec, x, w)
+        for b in BACKENDS:
+            got = E.einsum(spec, x, w, backend=b)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plans: pure, hashable, jit-cache stable
+# ---------------------------------------------------------------------------
+
+class TestPlans:
+    def test_plan_pure_and_hashable(self):
+        a = E.plan_conv2d((1, 12, 12, 8), (3, 3, 8, 16), 1, 1, 1, "xla")
+        b = E.plan_conv2d((1, 12, 12, 8), (3, 3, 8, 16), 1, 1, 1, "xla")
+        assert a == b and hash(a) == hash(b)
+        assert {a: "v"}[b] == "v"                  # usable as dict key
+        assert a.mode == E.plan_conv2d(
+            (1, 12, 12, 8), (3, 3, 8, 16), 1, 1, 1, "pallas").mode
+
+    def test_plan_matches_paper_mode(self):
+        for w_f, s in TABLE3_MODES:
+            p = E.plan_conv2d((1, 23, 23, 8), (w_f, w_f, 8, 16), s, 0, 1,
+                              "xla")
+            assert (p.mode.w_f, p.mode.s) == (w_f, s)
+            assert p.macs > 0 and p.cycles > 0
+            assert 0.0 < p.performance_efficiency <= 1.0
+
+    def test_plan_tolerates_wide_1d_filters(self):
+        # hubert's 128-tap positional conv exceeds the 11-register MMIE
+        # weight generator; the plan books a derived schedule, no crash.
+        p = E.plan_conv1d_depthwise((2, 64, 32), (128, 32), "xla")
+        assert p.mode.w_f == 128 and p.cycles > 0
+
+    def test_jit_cache_stable(self):
+        traces = []
+
+        @jax.jit
+        def f(x, w):
+            traces.append(1)
+            return E.dense(x, w)
+
+        x = jnp.ones((4, 16)); w = jnp.ones((16, 8))
+        f(x, w); f(x, w); f(x + 1, w)
+        assert len(traces) == 1                    # one trace, one compile
+
+    def test_dense_einsum_macs_accounting(self):
+        p = E.plan_einsum("...n,nm->...m", (7, 3, 64), (64, 32), "xla")
+        assert p.macs == 7 * 3 * 64 * 32
+        pe = E.plan_einsum("ecd,edf->ecf", (4, 9, 16), (4, 16, 8), "xla")
+        assert pe.macs == 4 * 9 * 16 * 8
+
+    def test_unsupported_specs_raise(self):
+        with pytest.raises(ValueError):
+            E.plan_einsum("ab,bc", (2, 3), (3, 4), "xla")     # no output
+        with pytest.raises(ValueError):
+            E.plan_einsum("ab,cd->ad", (2, 3), (3, 4), "xla")  # summed label
+
+
+# ---------------------------------------------------------------------------
+# Ledger / tracking
+# ---------------------------------------------------------------------------
+
+class TestLedger:
+    def test_totals_identical_across_retraces(self):
+        def f(x, w):
+            return E.dense(E.conv2d(x, w, pad=1).reshape(x.shape[0], -1),
+                           jnp.ones((12 * 12 * 16, 8), jnp.float32))
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16))
+        with E.tracking() as eager:
+            f(x, w)
+        with E.tracking() as trace1:
+            jax.jit(f)(x, w)
+        jax.clear_caches()                         # force a genuine re-trace
+        with E.tracking() as trace2:
+            jax.jit(f)(x, w)
+        assert (eager.total_cycles, eager.total_macs) \
+            == (trace1.total_cycles, trace1.total_macs) \
+            == (trace2.total_cycles, trace2.total_macs)
+        assert len(eager) == len(trace1) == len(trace2) == 2
+
+    def test_no_tracking_records_nothing(self):
+        with E.tracking() as led:
+            pass
+        E.dense(jnp.ones((2, 4)), jnp.ones((4, 3)))
+        assert len(led) == 0
+
+    def test_nested_tracking_stacks(self):
+        x, w = jnp.ones((2, 4)), jnp.ones((4, 3))
+        with E.tracking() as outer:
+            E.dense(x, w)
+            with E.tracking() as inner:
+                E.dense(x, w)
+        assert len(outer) == 2 and len(inner) == 1
+
+    def test_report_format(self):
+        with E.tracking() as led:
+            E.conv2d(jnp.ones((1, 8, 8, 4)), jnp.ones((3, 3, 4, 8)), pad=1)
+        lines = led.report().splitlines()
+        assert lines[0].startswith("kind,mode(Wf,S)")
+        assert lines[1].startswith("conv2d,(3,1),3,")
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtin_backends_registered(self):
+        assert set(BACKENDS) <= set(E.backend_names())
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(KeyError, match="unknown engine backend"):
+            E.dense(jnp.ones((2, 4)), jnp.ones((4, 3)), backend="nope")
+
+    def test_register_custom_backend(self):
+        ref = E.get_backend("ref")
+        custom = E.EngineBackend("_test_double", ref.conv2d,
+                                 ref.conv1d_depthwise,
+                                 lambda spec, x, w, plan, st, **kw:
+                                 2.0 * jnp.einsum(spec, x, w))
+        E.register_backend(custom, overwrite=True)
+        x, w = jnp.ones((2, 4)), jnp.ones((4, 3))
+        np.testing.assert_allclose(E.dense(x, w, backend="_test_double"),
+                                   2.0 * (x @ w))
+        with pytest.raises(ValueError, match="already registered"):
+            E.register_backend(custom)
+
+    def test_using_backend_ambient(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 9, 9, 4))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 8))
+        with E.tracking() as led, E.using_backend("ref"):
+            E.conv2d(x, w, pad=1)
+        assert led.records[0].plan.backend == "ref"
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim equivalence (acceptance: identical AlexNet ledger totals)
+# ---------------------------------------------------------------------------
+
+class TestLegacyShim:
+    def test_multi_mode_engine_importable_and_deprecated(self):
+        with pytest.warns(DeprecationWarning):
+            eng = MultiModeEngine(EngineConfig())
+        y = eng.conv2d(jnp.ones((1, 8, 8, 4)), jnp.ones((3, 3, 4, 8)), pad=1)
+        assert y.shape == (1, 8, 8, 8) and eng.total_cycles > 0
+
+    def test_alexnet_ledger_matches_legacy_engine(self):
+        key = jax.random.PRNGKey(0)
+        params = cnn.init_cnn("alexnet", key)
+        x = jax.random.normal(key, (1, 227, 227, 3), jnp.float32) * 0.1
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = MultiModeEngine(EngineConfig(backend="xla",
+                                               track_analytics=True))
+        y_old = cnn.apply_cnn("alexnet", params, x, old)
+        with E.tracking() as led:
+            y_new = cnn.apply_cnn("alexnet", params, x, backend="xla")
+        np.testing.assert_allclose(y_old, y_new, rtol=1e-5, atol=1e-5)
+        assert old.total_cycles == led.total_cycles
+        assert old.total_macs == led.total_macs
+        assert old.report() == led.report()

@@ -1,10 +1,13 @@
 """Flash attention (custom VJP) — forward AND gradient parity with the
 dense reference across masks, caps, GQA groupings and chunk sizes."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.models.attention import dense_attention

@@ -1,10 +1,13 @@
 """GFID dataflow algebra: the banded matrix (Eq. 3-7), active-neuron counts
 (Table 2), and the shifted-GEMM lowering vs XLA's direct convolution."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import gfid

@@ -1,9 +1,12 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.kernels import ops, ref

@@ -3,11 +3,14 @@ compression, sharding rules."""
 import math
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.checkpoint.manager import CheckpointManager
