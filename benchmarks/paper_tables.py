@@ -9,6 +9,7 @@ Fig. 5   — per-layer breakdowns (efficiency, MA, latency) per network.
 """
 from __future__ import annotations
 
+from repro import engine as E
 from repro.core import analytics as A
 from repro.core import modes as M
 from repro.models import cnn
@@ -46,21 +47,28 @@ def table3_rows():
             for w, s in [(11, 4), (7, 2), (5, 1), (3, 1), (1, 1)]]
 
 
+def network_plan(net: str) -> E.NetworkPlan:
+    """Table-4 counting of `net` as a whole-network `engine.NetworkPlan`
+    (identical totals to `analytics.network_cost` — the plan-based engine
+    and the closed-form model share the cost equations)."""
+    return E.plan_network(cnn.program(net), E.EngineConfig())
+
+
 def table4_rows():
     rows = []
     for net, paper in PAPER_TABLE4.items():
-        convs, fcs = cnn.analytics_layers(net)
-        nc = A.network_cost(net, convs, fcs)
+        np_ = network_plan(net)
+        row = np_.table4_row()
         rows.append({
             "net": net,
-            "conv_ms": nc.conv_latency_s * 1e3, "paper_conv_ms": paper[0],
-            "fc_ms": nc.fc_latency_s * 1e3, "paper_fc_ms": paper[1],
-            "conv_MA_MB": nc.conv_ma_bytes / 1e6, "paper_conv_MA": paper[2],
-            "fc_MA_MB": nc.fc_ma_bytes / 1e6, "paper_fc_MA": paper[3],
-            "conv_eff": nc.conv_perf_efficiency, "paper_conv_eff": paper[4],
-            "fc_eff": nc.fc_perf_efficiency, "paper_fc_eff": paper[5],
-            "conv_gops": nc.conv_throughput_gops,
-            "fps_conv": 1.0 / nc.conv_latency_s,
+            "conv_ms": row["conv_ms"], "paper_conv_ms": paper[0],
+            "fc_ms": row["fc_ms"], "paper_fc_ms": paper[1],
+            "conv_MA_MB": row["conv_MA_MB"], "paper_conv_MA": paper[2],
+            "fc_MA_MB": row["fc_MA_MB"], "paper_fc_MA": paper[3],
+            "conv_eff": row["conv_eff"], "paper_conv_eff": paper[4],
+            "fc_eff": row["fc_eff"], "paper_fc_eff": paper[5],
+            "conv_gops": 2 * np_.conv_macs / np_.conv_latency_s / 1e9,
+            "fps_conv": 1.0 / np_.conv_latency_s,
         })
     return rows
 

@@ -1,32 +1,117 @@
 """Benchmark driver. One section per paper table/figure plus kernel and
-end-to-end microbenchmarks. Prints ``name,us_per_call,derived`` CSV."""
+end-to-end microbenchmarks. Prints ``name,us_per_call,derived`` CSV and
+emits a machine-readable ``BENCH_engine.json`` with, per network, the
+whole-network analytic plan (latency / memory accesses / efficiency off
+`engine.NetworkPlan`) and the wall-clock of the jitted
+``CompiledNet.apply``.
+
+  python -m benchmarks.run [--smoke] [--out BENCH_engine.json]
+
+``--smoke`` runs the AlexNet-only fast path (CI regression gate): paper
+tables, the engine JSON, and no heavy kernel/train microbenchmarks.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import time
 
 
-def main() -> None:
+def bench_compiled_net(net: str, cfg=None) -> dict:
+    """Analytic NetworkPlan aggregates + wall-clock of CompiledNet.apply."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import engine as E
+    from repro.models import cnn
+
+    cfg = cfg or E.EngineConfig()
+    compiled = E.compile(cnn.program(net), cfg)
+    plan = compiled.plan
+
+    key = jax.random.PRNGKey(0)
+    h, w, c = cnn.CNNS[net].input_hw_c
+    params = cnn.init_cnn(net, key)
+    x = jax.random.normal(key, (1, h, w, c), jnp.float32) * 0.1
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(compiled.apply(params, x))   # compile + first run
+    t_first = time.perf_counter() - t0
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = compiled.apply(params, x)
+    jax.block_until_ready(out)
+    t_steady = (time.perf_counter() - t0) / iters
+
+    return {
+        "net": net,
+        "config": {"backend": cfg.backend, "policy": cfg.policy,
+                   "interpret": cfg.interpret},
+        "ops": len(compiled.plan.plans),
+        "exec_ops": len(compiled.exec_pairs or ()),
+        "analytic": {
+            "conv_latency_ms": plan.conv_latency_s * 1e3,
+            "fc_latency_ms": plan.fc_latency_s * 1e3,
+            "conv_ma_mb": plan.conv_ma_bytes / 1e6,
+            "fc_ma_mb": plan.fc_ma_bytes / 1e6,
+            "conv_perf_efficiency": plan.conv_perf_efficiency,
+            "fc_perf_efficiency": plan.fc_perf_efficiency,
+            "total_macs": plan.total_macs,
+        },
+        "wallclock": {
+            "first_call_s": t_first,
+            "steady_call_s": t_steady,
+            "batch": 1,
+        },
+    }
+
+
+def emit_engine_json(path: str, nets, emit=print) -> None:
+    results = {"bench": "engine_compiled_nets",
+               "networks": [bench_compiled_net(net) for net in nets]}
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    for r in results["networks"]:
+        emit(f"engine/compiled_{r['net']},"
+             f"{r['wallclock']['steady_call_s']*1e6:.0f},"
+             f"analytic_ms={r['analytic']['conv_latency_ms'] + r['analytic']['fc_latency_ms']:.1f};"
+             f"eff={r['analytic']['conv_perf_efficiency']:.3f}")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI path: alexnet only, no kernel/train bench")
+    ap.add_argument("--out", default="BENCH_engine.json",
+                    help="machine-readable engine bench output path")
+    args = ap.parse_args(argv)
+
     from benchmarks import paper_tables
     print("name,us_per_call,derived")
-    # Paper tables are analytic (no wall time): emit as derived rows.
-    from repro.core.analytics import network_cost
-    from repro.models import cnn
+    # Paper tables are analytic (no wall time): emit as derived rows,
+    # straight off the whole-network engine plan.
     for net, paper in paper_tables.PAPER_TABLE4.items():
-        convs, fcs = cnn.analytics_layers(net)
-        nc = network_cost(net, convs, fcs)
-        print(f"paper_table4/{net}_conv,{nc.conv_latency_s*1e6:.0f},"
-              f"eff={nc.conv_perf_efficiency:.3f};paper_ms={paper[0]};"
-              f"MA_MB={nc.conv_ma_bytes/1e6:.1f}")
-        print(f"paper_table4/{net}_fc,{nc.fc_latency_s*1e6:.0f},"
-              f"eff={nc.fc_perf_efficiency:.3f};paper_ms={paper[1]};"
-              f"MA_MB={nc.fc_ma_bytes/1e6:.1f}")
+        np_ = paper_tables.network_plan(net)
+        print(f"paper_table4/{net}_conv,{np_.conv_latency_s*1e6:.0f},"
+              f"eff={np_.conv_perf_efficiency:.3f};paper_ms={paper[0]};"
+              f"MA_MB={np_.conv_ma_bytes/1e6:.1f}")
+        print(f"paper_table4/{net}_fc,{np_.fc_latency_s*1e6:.0f},"
+              f"eff={np_.fc_perf_efficiency:.3f};paper_ms={paper[1]};"
+              f"MA_MB={np_.fc_ma_bytes/1e6:.1f}")
     for net, filt, s, t in paper_tables.table2_rows():
         print(f"paper_table2/{net}_{filt}_s{s},0,T={t}")
     for filt, s, n_eff, p_eff in paper_tables.table3_rows():
         print(f"paper_table3/{filt}_s{s},0,N_eff={n_eff};p_eff={p_eff}")
 
-    from benchmarks import kernel_bench
-    kernel_bench.run_all()
+    nets = ["alexnet"] if args.smoke else ["alexnet", "vgg16", "resnet50"]
+    emit_engine_json(args.out, nets)
+
+    if not args.smoke:
+        from benchmarks import kernel_bench
+        kernel_bench.run_all()
 
     print("", file=sys.stderr)
     print("full paper tables: PYTHONPATH=src python -m benchmarks.paper_tables",

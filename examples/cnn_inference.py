@@ -4,9 +4,13 @@ analytics (Fig. 5) alongside the functional forward pass.
 
 Uses the plan-based `repro.engine` API: the forward pass is wrapped in
 `engine.tracking()`, which yields the analytic `Ledger` (identical totals
-to the legacy `MultiModeEngine` ledger).
+to the legacy `MultiModeEngine` ledger). `--compiled` switches to the
+two-phase path instead: `engine.compile(cnn.program(net), EngineConfig)`
+plans the whole network up front (Table-4 aggregates with no forward pass)
+and runs the jitted `CompiledNet.apply`.
 
   PYTHONPATH=src python examples/cnn_inference.py [--net resnet50]
+  PYTHONPATH=src python examples/cnn_inference.py --compiled --policy auto
 """
 import argparse
 
@@ -27,6 +31,10 @@ def main(argv=None):
                     choices=["xla", "ref", "pallas"])
     ap.add_argument("--fixed-point", action="store_true",
                     help="simulate the paper's 16-bit quantization")
+    ap.add_argument("--compiled", action="store_true",
+                    help="whole-network compile/execute path")
+    ap.add_argument("--policy", default="fixed", choices=["fixed", "auto"],
+                    help="backend-selection policy for --compiled")
     args = ap.parse_args(argv)
 
     net = args.net
@@ -39,6 +47,22 @@ def main(argv=None):
         params = jax.tree_util.tree_map(
             lambda t: quantize(t, WEIGHT_FORMAT), params)
         x = quantize(x, ACT_FORMAT)
+
+    if args.compiled:
+        cfg = engine.EngineConfig(backend=args.backend, policy=args.policy)
+        compiled = engine.compile(cnn.program(net, batch=args.batch), cfg)
+        row = compiled.cost
+        print(f"{net}: NetworkPlan over {len(compiled.plan.plans)} ops "
+              f"(no forward pass needed)")
+        print(f"  conv {row['conv_ms']:.1f} ms @200MHz · "
+              f"fc {row['fc_ms']:.2f} ms @40MHz · "
+              f"MA {row['conv_MA_MB'] + row['fc_MA_MB']:.1f} MB · "
+              f"conv eff {row['conv_eff']:.3f}")
+        print(f"  per-layer backends: {compiled.backends()}")
+        logits = compiled.apply(params, x)
+        print(f"  logits {logits.shape}, top-1 idx "
+              f"{int(jnp.argmax(logits[0]))}")
+        return
 
     with engine.tracking() as ledger:
         logits = cnn.apply_cnn(net, params, x, backend=args.backend)

@@ -7,10 +7,21 @@ projections, FFN / MoE expert GEMMs, embeddings / LM heads — routes through
 *same* engine operating in different modes, exactly as the MMIE chip runs
 both conv and FC layers on the same 192 PEs.
 
-Three functional pieces (all pure, jit-friendly, singleton-free):
+Two-phase compile/execute model (the paper's network-level scheduling):
 
-  * `EnginePlan` (plan.py)    — hashable per-op plan from shapes alone:
-    Table-3 mode, MXU tiling, analytic cost (Eqs. 15-18);
+  * `EngineConfig` (config.py)  — frozen, hashable execution config
+    (backend, interpret, accum, policy); ambient via `using_config`,
+    jit-static friendly. `using_backend` / `set_interpret` are thin shims.
+  * `Program` / `NetworkPlan` / `compile` (program.py) — ordered op graphs
+    from layer tables (`models.cnn.program`) or traced forwards
+    (`trace_program`), planned whole-network into Table-4 aggregates and a
+    jitted `CompiledNet.apply` with per-layer backend selection
+    (`policy="auto"`).
+
+Per-op pieces (all pure, jit-friendly, singleton-free):
+
+  * `EnginePlan` / `OpSpec` (plan.py) — hashable per-op plan/op from shapes
+    alone: Table-3 mode, MXU tiling, analytic cost (Eqs. 15-18);
   * backend registry (dispatch.py) — "pallas" / "xla" / "ref", extensible
     via `register_backend`;
   * `Ledger` + `tracking()` (ledger.py) — explicit analytics, replacing the
@@ -20,12 +31,18 @@ Legacy `repro.core.MultiModeEngine` remains as a deprecation shim over this
 package for one release.
 """
 from repro.engine.api import (  # noqa: F401
-    conv1d_depthwise, conv2d, default_backend, dense, einsum, matmul, proj,
-    set_default_backend, set_interpret, using_backend)
+    capturing, conv1d_depthwise, conv2d, dense, einsum, matmul, proj,
+    replaying)
+from repro.engine.config import (  # noqa: F401
+    EngineConfig, current_config, default_backend, in_config_context,
+    set_default_backend, set_default_config, set_interpret, using_backend,
+    using_config)
 from repro.engine.dispatch import (  # noqa: F401
     EngineBackend, backend_names, get_backend, register_backend)
 from repro.engine.ledger import (  # noqa: F401
     Ledger, OpRecord, is_tracking, record, tracking)
 from repro.engine.plan import (  # noqa: F401
-    EnginePlan, dense_spec, parse_einsum, plan_conv1d_depthwise, plan_conv2d,
-    plan_einsum)
+    EnginePlan, OpSpec, auto_backend, dense_spec, parse_einsum, plan_conv1d_depthwise,
+    plan_conv2d, plan_einsum, plan_op)
+from repro.engine.program import (  # noqa: F401
+    CompiledNet, NetworkPlan, Program, compile, plan_network, trace_program)

@@ -8,11 +8,14 @@ on the same PEs" contract):
     y = engine.dense(x, w)                            # FC mode, (…,n)@(n,m)
     y = engine.einsum("ecd,edf->ecf", x, w)           # FC mode, general
 
-Every call computes a pure `EnginePlan` from the static shapes (cached),
-records it into any active `tracking()` ledger, and dispatches to the
-selected backend from the registry. Backend resolution order: the explicit
-``backend=`` argument, then the ambient `using_backend(...)` context, then
-the module default ("xla").
+Every call builds the op's `OpSpec` from its static shapes, computes the
+pure `EnginePlan` (cached), records it into any active `tracking()` ledger,
+and dispatches to the selected backend from the registry. Resolution order
+for the backend: the explicit ``backend=`` argument, then the plan of an
+executing `CompiledNet` (program replay), then the ambient
+`EngineConfig` (`using_config` / `using_backend` context or the process
+default — see `engine/config.py`); `interpret` and the accumulation policy
+resolve explicit-argument-first against the same config.
 
 Numerics: `accum_dtype=None` (the default for `einsum`) reproduces a plain
 `jnp.einsum` / `@` — same dot_general, same output dtype — so migrating a
@@ -24,49 +27,133 @@ given (the legacy engine always cast back to `x.dtype`).
 from __future__ import annotations
 
 import contextlib
-from typing import Iterator, List, Optional
+import threading
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.engine import dispatch, ledger as ledger_mod, plan as planlib
-
-# Ambient backend + Pallas interpret flag (CPU containers need interpret).
-_DEFAULT_BACKEND: List[str] = ["xla"]
-_INTERPRET: List[bool] = [True]
-
-
-def default_backend() -> str:
-    return _DEFAULT_BACKEND[-1]
+from repro.engine.config import (  # noqa: F401 (re-exported compat surface)
+    EngineConfig, current_config, default_backend, set_default_backend,
+    set_default_config, set_interpret, using_backend, using_config)
 
 
-def set_default_backend(name: str) -> None:
-    dispatch.get_backend(name)      # validate eagerly
-    _DEFAULT_BACKEND[0] = name
+class _Unset:
+    def __repr__(self) -> str:      # keeps signatures readable in help()
+        return "<per-op default>"
+
+
+_UNSET = _Unset()
+
+_ACCUM_DEFAULTS = {"conv2d": jnp.float32, "dense": jnp.float32,
+                   "einsum": None}
+
+
+def _resolve_accum(arg, op_kind: str):
+    if not isinstance(arg, _Unset):
+        return arg                      # explicit argument wins (None = native)
+    accum = current_config().accum
+    if accum is None:
+        return _ACCUM_DEFAULTS[op_kind]
+    if accum == "native":
+        return None
+    return jnp.dtype(accum)
+
+
+# ---------------------------------------------------------------------------
+# Program capture & replay (used by engine/program.py)
+# ---------------------------------------------------------------------------
+
+class _ProgramState(threading.local):
+    def __init__(self) -> None:
+        self.capture: List[List[planlib.OpSpec]] = []
+        self.replay: List["_Cursor"] = []
+
+
+class _Cursor:
+    """Mutable position over a compiled (OpSpec, EnginePlan) sequence."""
+
+    def __init__(self, pairs: Sequence[Tuple[planlib.OpSpec,
+                                             planlib.EnginePlan]]):
+        self.pairs = tuple(pairs)
+        self.index = 0
+
+    def next_for(self, op: planlib.OpSpec) -> planlib.EnginePlan:
+        if self.index >= len(self.pairs):
+            raise RuntimeError(
+                f"compiled program expected {len(self.pairs)} engine ops but "
+                f"a further {op.kind} op was issued — the executed function "
+                "diverged from its captured op sequence (did the input "
+                "shapes change since compile()?)")
+        want, plan = self.pairs[self.index]
+        if want != op:
+            raise RuntimeError(
+                f"compiled program op {self.index} mismatch: planned "
+                f"{want.kind}{want.x_shape}x{want.w_shape}, executing "
+                f"{op.kind}{op.x_shape}x{op.w_shape} — recompile for these "
+                "input shapes")
+        self.index += 1
+        return plan
+
+
+_PROG = _ProgramState()
 
 
 @contextlib.contextmanager
-def using_backend(name: Optional[str]) -> Iterator[None]:
-    """Ambient backend for every engine call in the block (None = no-op)."""
-    if name is None:
-        yield
-        return
-    dispatch.get_backend(name)
-    _DEFAULT_BACKEND.append(name)
+def capturing(into: List[planlib.OpSpec]) -> Iterator[List[planlib.OpSpec]]:
+    """Record the `OpSpec` of every engine call in the block, in call order
+    (ledgers are paused: a capture is a dry shape-trace, not a run)."""
+    _PROG.capture.append(into)
     try:
-        yield
+        with ledger_mod.paused():
+            yield into
     finally:
-        _DEFAULT_BACKEND.pop()
+        _PROG.capture.pop()     # LIFO: by position, not by (==) value
 
 
-def set_interpret(interpret: bool) -> None:
-    """Whether Pallas kernels run in interpret mode (True on CPU)."""
-    _INTERPRET[0] = bool(interpret)
+@contextlib.contextmanager
+def replaying(pairs: Sequence[Tuple[planlib.OpSpec, planlib.EnginePlan]],
+              ) -> Iterator[_Cursor]:
+    """Execute the block against a compiled plan sequence: each engine call
+    consumes the next (OpSpec, EnginePlan) pair and runs on the plan's
+    backend. Divergence from the captured sequence raises."""
+    cur = _Cursor(pairs)
+    _PROG.replay.append(cur)
+    try:
+        yield cur
+    finally:
+        _PROG.replay.pop()
+    if cur.index != len(cur.pairs):
+        raise RuntimeError(
+            f"compiled program executed {cur.index} of {len(cur.pairs)} "
+            "planned engine ops — the function diverged from its captured "
+            "op sequence")
 
 
-def _resolve(backend: Optional[str], interpret: Optional[bool]):
-    name = backend if backend is not None else default_backend()
-    return name, (_INTERPRET[0] if interpret is None else interpret)
+def _plan_for(op: planlib.OpSpec,
+              backend_arg: Optional[str]) -> planlib.EnginePlan:
+    """Capture/replay hook + plan resolution for one issued op."""
+    for cap in _PROG.capture:
+        cap.append(op)
+    if _PROG.replay:
+        plan = _PROG.replay[-1].next_for(op)
+        if backend_arg is None:
+            return plan
+        dispatch.get_backend(backend_arg)          # explicit arg still wins
+        return planlib.plan_op(op, backend_arg)
+    if backend_arg is not None:
+        name = backend_arg
+    else:
+        cfg = current_config()
+        name = (planlib.auto_backend(op, cfg.backend)
+                if cfg.policy == "auto" else cfg.backend)
+    dispatch.get_backend(name)          # validate before caching a plan
+    return planlib.plan_op(op, name)
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return current_config().interpret if interpret is None else interpret
 
 
 # ---------------------------------------------------------------------------
@@ -75,18 +162,19 @@ def _resolve(backend: Optional[str], interpret: Optional[bool]):
 
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
            groups: int = 1, backend: Optional[str] = None,
-           accum_dtype=jnp.float32,
+           accum_dtype=_UNSET,
            interpret: Optional[bool] = None) -> jax.Array:
     """Conv mode. x: (B,H,W,C_in) NHWC; w: (H_f,W_f,C_in/g,C_out) HWIO.
     Returns (B,H_out,W_out,C_out) in x.dtype."""
-    name, interp = _resolve(backend, interpret)
-    plan = planlib.plan_conv2d(tuple(map(int, x.shape)),
-                               tuple(map(int, w.shape)),
-                               int(stride), int(pad), int(groups), name)
+    op = planlib.OpSpec("conv2d", tuple(map(int, x.shape)),
+                        tuple(map(int, w.shape)), stride=int(stride),
+                        pad=int(pad), groups=int(groups))
+    plan = _plan_for(op, backend)
     ledger_mod.record(plan)
-    out = dispatch.get_backend(name).conv2d(
+    out = dispatch.get_backend(plan.backend).conv2d(
         x, w, plan, stride=stride, pad=pad, groups=groups,
-        accum_dtype=accum_dtype, interpret=interp)
+        accum_dtype=_resolve_accum(accum_dtype, "conv2d"),
+        interpret=_interp(interpret))
     return out.astype(x.dtype)
 
 
@@ -94,34 +182,37 @@ def conv1d_depthwise(x: jax.Array, w: jax.Array, *, causal: bool = True,
                      backend: Optional[str] = None,
                      interpret: Optional[bool] = None) -> jax.Array:
     """1-D depthwise mode (Mamba/xLSTM short conv). x: (B,L,D); w: (W_f,D)."""
-    name, interp = _resolve(backend, interpret)
-    plan = planlib.plan_conv1d_depthwise(tuple(map(int, x.shape)),
-                                         tuple(map(int, w.shape)), name)
+    op = planlib.OpSpec("conv1d_dw", tuple(map(int, x.shape)),
+                        tuple(map(int, w.shape)), causal=bool(causal))
+    plan = _plan_for(op, backend)
     ledger_mod.record(plan)
-    out = dispatch.get_backend(name).conv1d_depthwise(
-        x, w, plan, causal=causal, interpret=interp)
+    out = dispatch.get_backend(plan.backend).conv1d_depthwise(
+        x, w, plan, causal=causal, interpret=_interp(interpret))
     return out.astype(x.dtype)
 
 
 def einsum(spec: str, x: jax.Array, w: jax.Array, *,
-           backend: Optional[str] = None, accum_dtype=None,
+           backend: Optional[str] = None, accum_dtype=_UNSET,
            out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
     """FC mode for any two-operand dense contraction (weights second)."""
-    name, interp = _resolve(backend, interpret)
-    plan = planlib.plan_einsum(spec, tuple(map(int, x.shape)),
-                               tuple(map(int, w.shape)), name)
+    op = planlib.OpSpec("dense", tuple(map(int, x.shape)),
+                        tuple(map(int, w.shape)), spec=spec)
+    plan = _plan_for(op, backend)
     ledger_mod.record(plan)
     structure = planlib.parse_einsum(spec, x.ndim, w.ndim)
-    out = dispatch.get_backend(name).einsum(
-        spec, x, w, plan, structure, accum_dtype=accum_dtype,
-        interpret=interp)
+    out = dispatch.get_backend(plan.backend).einsum(
+        spec, x, w, plan, structure,
+        accum_dtype=_resolve_accum(accum_dtype, "einsum"),
+        interpret=_interp(interpret))
     return out if out_dtype is None else out.astype(out_dtype)
 
 
 def dense(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
-          accum_dtype=jnp.float32, out_dtype=None,
+          accum_dtype=_UNSET, out_dtype=None,
           interpret: Optional[bool] = None) -> jax.Array:
     """FC mode (W_f = 1): x (..., n) @ w (n, m) -> (..., m)."""
+    if isinstance(accum_dtype, _Unset):
+        accum_dtype = _resolve_accum(accum_dtype, "dense")
     return einsum(planlib.dense_spec(x.ndim), x, w, backend=backend,
                   accum_dtype=accum_dtype, out_dtype=out_dtype,
                   interpret=interpret)

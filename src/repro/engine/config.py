@@ -1,0 +1,151 @@
+"""EngineConfig — the frozen, explicit execution configuration of the engine.
+
+One immutable object carries everything the engine needs to resolve a call:
+the backend, the Pallas interpret flag, the accumulation policy and the
+backend-selection policy. Because it is a frozen dataclass of strings and
+bools it is hashable and equality-comparable, so it can be
+
+  * threaded through `jax.jit` as a *static* argument (two equal configs hit
+    the same jit cache entry),
+  * used as a dict key (e.g. memoizing `engine.compile` results),
+  * passed across threads safely — unlike the old module-level
+    `_DEFAULT_BACKEND` / `_INTERPRET` list stacks this module replaces.
+
+Ambient resolution keeps working via a *thread-local* stack of configs:
+`using_config(cfg)` (and the thin `using_backend(name)` shim over it)
+pushes for the dynamic extent of a block; `current_config()` reads the top.
+The process-wide base config is set with `set_default_config` /
+`set_default_backend` / `set_interpret` — which now raise `RuntimeError`
+when called inside an active context instead of being silently shadowed
+until the context pops (the old stack wrote index 0 while contexts
+pushed/popped the same list, so the write was invisible).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Iterator, List, Optional
+
+_POLICIES = ("fixed", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen engine execution config (hashable; jit-static friendly).
+
+    backend   — registry name ("xla" | "pallas" | "ref" | custom); with
+                policy="auto" it is the fallback for layers the auto policy
+                does not send to Pallas.
+    interpret — run Pallas kernels in interpret mode (True on CPU hosts).
+    accum     — accumulation policy: None keeps each op's own default
+                (fp32 for conv2d/dense, native for einsum); "native" forces
+                plain `@` numerics; any dtype name ("float32", "bfloat16")
+                forces that `preferred_element_type`.
+    policy    — backend selection: "fixed" uses `backend` everywhere;
+                "auto" picks pallas-vs-`backend` per op from its plan
+                (see `plan.auto_backend`).
+    """
+
+    backend: str = "xla"
+    interpret: bool = True
+    accum: Optional[str] = None
+    policy: str = "fixed"
+
+    def __post_init__(self) -> None:
+        if self.policy not in _POLICIES:
+            raise ValueError(
+                f"unknown backend-selection policy {self.policy!r}; "
+                f"expected one of {_POLICIES}")
+        if self.accum is not None and self.accum != "native":
+            import numpy as np
+            try:
+                np.dtype(self.accum)
+            except TypeError as e:
+                raise ValueError(
+                    f"accum must be None, 'native' or a dtype name; "
+                    f"got {self.accum!r}") from e
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Process-wide base config (bottom of every thread's resolution order).
+_BASE: List[EngineConfig] = [EngineConfig()]
+
+
+class _Stack(threading.local):
+    def __init__(self) -> None:
+        self.configs: List[EngineConfig] = []
+
+
+_TLS = _Stack()
+
+
+def current_config() -> EngineConfig:
+    """The ambient config: innermost active `using_config` block on this
+    thread, else the process-wide default."""
+    return _TLS.configs[-1] if _TLS.configs else _BASE[0]
+
+
+def default_backend() -> str:
+    return current_config().backend
+
+
+def in_config_context() -> bool:
+    return bool(_TLS.configs)
+
+
+@contextlib.contextmanager
+def using_config(cfg: Optional[EngineConfig]) -> Iterator[None]:
+    """Ambient `EngineConfig` for every engine call in the block
+    (None = no-op, so call sites can thread an optional config)."""
+    if cfg is None:
+        yield
+        return
+    from repro.engine import dispatch
+    dispatch.get_backend(cfg.backend)       # validate eagerly
+    _TLS.configs.append(cfg)
+    try:
+        yield
+    finally:
+        _TLS.configs.pop()
+
+
+def using_backend(name: Optional[str]):
+    """Compat shim over `using_config`: ambient backend for the block,
+    keeping every other knob of the current config (None = no-op)."""
+    if name is None:
+        return contextlib.nullcontext()
+    return using_config(current_config().replace(backend=name))
+
+
+def _require_no_context(what: str) -> None:
+    if _TLS.configs:
+        raise RuntimeError(
+            f"{what} inside an active using_backend()/using_config() "
+            "context would be silently shadowed until the context exits; "
+            "pass a config/backend to the context instead, or call this "
+            "outside it")
+
+
+def set_default_config(cfg: EngineConfig) -> None:
+    """Replace the process-wide base config. Errors inside an active
+    ambient context (the old list stack silently ignored the write)."""
+    from repro.engine import dispatch
+    dispatch.get_backend(cfg.backend)
+    _require_no_context("set_default_config()")
+    _BASE[0] = cfg
+
+
+def set_default_backend(name: str) -> None:
+    from repro.engine import dispatch
+    dispatch.get_backend(name)              # validate eagerly
+    _require_no_context("set_default_backend()")
+    _BASE[0] = _BASE[0].replace(backend=name)
+
+
+def set_interpret(interpret: bool) -> None:
+    """Whether Pallas kernels run in interpret mode (True on CPU)."""
+    _require_no_context("set_interpret()")
+    _BASE[0] = _BASE[0].replace(interpret=bool(interpret))

@@ -120,6 +120,20 @@ def is_tracking() -> bool:
     return bool(_ACTIVE)
 
 
+@contextlib.contextmanager
+def paused() -> Iterator[None]:
+    """Suspend all active ledgers for the block. Used by program capture
+    (`engine.trace_program` / `engine.compile`), which shape-traces the
+    network without running it — those phantom ops must not be priced into
+    a user's `tracking()` ledger."""
+    saved = _ACTIVE[:]
+    _ACTIVE.clear()
+    try:
+        yield
+    finally:
+        _ACTIVE.extend(saved)
+
+
 def record(plan: EnginePlan) -> None:
     """Record `plan` into every active ledger (no-op when none)."""
     for led in _ACTIVE:

@@ -34,6 +34,74 @@ Shape = Tuple[int, ...]
 
 
 @dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """The shape-complete invocation record of one engine op.
+
+    Where `EnginePlan` is the engine's *decision* about an op, `OpSpec` is
+    the op itself — kind, operand shapes and static knobs — i.e. one node
+    of a `program.Program` graph. It is a frozen dataclass of ints and
+    strings: hashable, usable as a dict key, re-plannable under any
+    `EngineConfig` via `plan_op`.
+    """
+
+    kind: str                       # "conv2d" | "conv1d_dw" | "dense"
+    x_shape: Shape
+    w_shape: Shape
+    spec: str = ""                  # einsum spec ("dense" kind only)
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    causal: bool = True             # conv1d_dw only
+    name: str = dataclasses.field(default="", compare=False)  # layer label
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("conv2d", "conv1d_dw", "dense"):
+            raise ValueError(f"unknown op kind {self.kind!r}")
+
+
+def plan_op(op: OpSpec, backend: str) -> EnginePlan:
+    """Plan one `OpSpec` for `backend` (shared lru caches with the per-op
+    planners, so compile-then-execute never plans twice)."""
+    if op.kind == "conv2d":
+        return plan_conv2d(op.x_shape, op.w_shape, op.stride, op.pad,
+                           op.groups, backend)
+    if op.kind == "conv1d_dw":
+        return plan_conv1d_depthwise(op.x_shape, op.w_shape, backend)
+    return plan_einsum(op.spec, op.x_shape, op.w_shape, backend)
+
+
+def auto_backend(op: OpSpec, fallback: str = "xla") -> str:
+    """The "auto" backend-selection policy: pallas vs `fallback` per layer.
+
+    The Pallas kernels are blocked MXU GEMMs, so they win when the op maps
+    onto full (8, 128)-tile GEMM work and lose to the XLA lowering when the
+    contraction is ragged or batched:
+
+      * dense ops go to pallas when they canonicalize to a 2-D
+        `(M, K) @ (K, N)` (single contract label, 2-D weights, no batched
+        weights) with K and N each >= 128 — one full MXU k/cout tile;
+      * 1x1 convs (mode T=1: a pure GEMM per pixel row) go to pallas under
+        the same >=128 channel-fill test;
+      * wider conv filters and depthwise 1-D convs stay on `fallback`
+        (the shifted-GEMM loop fuses better under XLA).
+    """
+    if op.kind == "conv2d":
+        plan = plan_op(op, fallback)
+        c_in = op.w_shape[2]
+        c_out = op.w_shape[3]
+        if plan.mode.t == 1 and c_in >= 128 and c_out >= 128:
+            return "pallas"
+        return fallback
+    if op.kind == "dense":
+        st = parse_einsum(op.spec, len(op.x_shape), len(op.w_shape))
+        canonical = (len(op.w_shape) == 2 and len(st.contract) == 1
+                     and not st.batch)
+        if canonical and min(op.w_shape) >= 128:
+            return "pallas"
+    return fallback
+
+
+@dataclasses.dataclass(frozen=True)
 class EnginePlan:
     """Everything the engine decided about one op, from shapes alone."""
 
@@ -151,6 +219,11 @@ def parse_einsum(spec: str, x_ndim: int, w_ndim: int) -> EinsumStructure:
 
     x_labels = expand(ops[0], x_ndim)
     w_labels = expand(ops[1], w_ndim)
+    for labels, side in ((x_labels, "operand 0"), (w_labels, "operand 1")):
+        if len(set(labels)) != len(labels):
+            raise ValueError(
+                f"repeated label within {side} of {spec!r} (a diagonal, "
+                "not a dense contraction the engine can plan)")
     rhs = rhs.replace(" ", "")
     if "..." in rhs:
         # output ellipsis carries the x-side ellipsis labels (numpy rule:
@@ -189,9 +262,12 @@ def plan_einsum(spec: str, x_shape: Shape, w_shape: Shape,
                 raise ValueError(
                     f"size mismatch for {lab!r} in {spec!r}: "
                     f"{dims[lab]} vs {size}")
-    n = math.prod(dims[l] for l in st.contract) or 1
-    m = math.prod(dims[l] for l in st.w_free) or 1
-    reps = math.prod(dims[l] for l in st.batch + st.x_free) or 1
+    # math.prod of an empty tuple is 1 (no contract labels = outer product,
+    # one MAC per output element); a genuine zero-size dim propagates a
+    # zero-work plan (0 MACs, 0 cycles) instead of being rounded up.
+    n = math.prod(dims[l] for l in st.contract)
+    m = math.prod(dims[l] for l in st.w_free)
+    reps = math.prod(dims[l] for l in st.batch + st.x_free)
     fc = analytics.fc_cost(analytics.FCLayerSpec("fc", n, m))
     mode = modes.fc_mode()
     return EnginePlan(

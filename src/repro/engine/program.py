@@ -1,0 +1,284 @@
+"""Whole-network planning: Program -> compile(cfg) -> CompiledNet.
+
+The paper's headline numbers are *network-level* — Table 4 schedules every
+layer of AlexNet / VGG-16 / ResNet-50 onto the same 192 PEs — but the
+per-call engine API only ever sees one op. This module adds the two-phase
+compile/execute model on top of it:
+
+  * `Program`     — an ordered, shape-complete op graph (a tuple of
+    `plan.OpSpec`s) plus, optionally, the executable forward function it
+    was derived from. Built from layer tables (`models.cnn.program`) or
+    captured from any JAX forward with `trace_program(fn, *avals)` — the
+    transformer / SSM forwards behind `serve.engine` included.
+  * `NetworkPlan` — the tuple of per-op `EnginePlan`s with the paper's
+    Table-4 aggregates (conv @200 MHz vs FC @40 MHz latency, memory-access
+    bytes, performance efficiency), computed from shapes alone, without
+    running the model.
+  * `compile(program, cfg)` -> `CompiledNet` — plans every op under one
+    frozen `EngineConfig` (per-layer pallas-vs-xla selection when
+    `cfg.policy == "auto"`), exposes `.plan` / `.cost`, and a jitted
+    `.apply(*args)` that executes the forward with each op pinned to its
+    planned backend (strict: shape divergence from the captured op
+    sequence raises instead of silently re-planning).
+
+Capture and execution both run through `api.capturing` / `api.replaying`,
+so a compiled network and an eager call see the exact same planning logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core import modes
+from repro.engine import api
+from repro.engine.config import EngineConfig, current_config, using_config
+from repro.engine.plan import EnginePlan, OpSpec, auto_backend, plan_op
+
+_CONV_KINDS = ("conv2d", "conv1d_dw")
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """An ordered, shape-complete engine-op graph for one network.
+
+    `ops` alone fully determines the `NetworkPlan` (analytics need no
+    arrays); `fn`/`in_avals` carry the executable forward for
+    `CompiledNet.apply` and are excluded from equality/hash so a Program is
+    usable as a dict / jit-static key.
+    """
+
+    name: str
+    ops: Tuple[OpSpec, ...]
+    fn: Optional[Callable[..., Any]] = dataclasses.field(
+        default=None, compare=False)
+    in_avals: Tuple[Any, ...] = dataclasses.field(
+        default=(), compare=False)
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+
+def trace_program(fn: Callable[..., Any], *avals: Any,
+                  name: str = "traced") -> Program:
+    """Capture `fn`'s engine ops into a `Program` by abstract evaluation.
+
+    `avals` are pytrees of `jax.ShapeDtypeStruct` (or concrete arrays) —
+    the capture runs under `jax.eval_shape`, so no FLOPs are spent and no
+    device buffers are touched. Every `engine.*` op `fn` issues is recorded
+    in call order with its static shapes; ops outside the engine (elementwise
+    math, pooling, attention softmax, ...) are executed abstractly but not
+    recorded, exactly like a `tracking()` ledger would price them.
+    """
+    return Program(name=name, ops=_capture_ops(fn, avals), fn=fn,
+                   in_avals=tuple(avals))
+
+
+def _capture_ops(fn: Callable[..., Any], avals: Tuple[Any, ...],
+                 ) -> Tuple[OpSpec, ...]:
+    ops: list = []
+    # The fresh lambda defeats jax.eval_shape's trace cache: a cached trace
+    # would skip the function body and record nothing.
+    with api.capturing(ops), using_config(EngineConfig(backend="xla")):
+        jax.eval_shape(lambda *a: fn(*a), *avals)
+    return tuple(ops)
+
+
+# ---------------------------------------------------------------------------
+# NetworkPlan — Table-4 aggregates from plans alone
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """Per-op plans plus the paper's network-level rollups (Table 4).
+
+    Aggregation matches `core.analytics.NetworkCost` exactly: conv-side
+    cycles are priced at the 200 MHz conv clock, FC-side (every `dense`
+    plan) at the 40 MHz FC clock; memory accesses are 16-bit words.
+    """
+
+    name: str
+    plans: Tuple[EnginePlan, ...]
+
+    @property
+    def conv_plans(self) -> Tuple[EnginePlan, ...]:
+        return tuple(p for p in self.plans if p.kind in _CONV_KINDS)
+
+    @property
+    def fc_plans(self) -> Tuple[EnginePlan, ...]:
+        return tuple(p for p in self.plans if p.kind == "dense")
+
+    # -- cycles / latency --------------------------------------------------
+
+    @property
+    def conv_cycles(self) -> int:
+        return sum(p.cycles for p in self.conv_plans)
+
+    @property
+    def fc_cycles(self) -> int:
+        return sum(p.cycles for p in self.fc_plans)
+
+    @property
+    def conv_latency_s(self) -> float:
+        return self.conv_cycles / modes.MMIE_CONV_FREQ_HZ
+
+    @property
+    def fc_latency_s(self) -> float:
+        return self.fc_cycles / modes.MMIE_FC_FREQ_HZ
+
+    @property
+    def total_latency_s(self) -> float:
+        return self.conv_latency_s + self.fc_latency_s
+
+    # -- memory accesses ---------------------------------------------------
+
+    @property
+    def conv_ma_words(self) -> int:
+        return sum(p.ma_words for p in self.conv_plans)
+
+    @property
+    def fc_ma_words(self) -> int:
+        return sum(p.ma_words for p in self.fc_plans)
+
+    @property
+    def conv_ma_bytes(self) -> int:
+        return self.conv_ma_words * modes.MMIE_WORD_BYTES
+
+    @property
+    def fc_ma_bytes(self) -> int:
+        return self.fc_ma_words * modes.MMIE_WORD_BYTES
+
+    # -- MACs / efficiency -------------------------------------------------
+
+    @property
+    def conv_macs(self) -> int:
+        return sum(p.macs for p in self.conv_plans)
+
+    @property
+    def fc_macs(self) -> int:
+        return sum(p.macs for p in self.fc_plans)
+
+    @property
+    def total_macs(self) -> int:
+        return self.conv_macs + self.fc_macs
+
+    @property
+    def conv_perf_efficiency(self) -> float:
+        cyc = self.conv_cycles
+        return self.conv_macs / (modes.MMIE_NUM_PES * cyc) if cyc else 0.0
+
+    @property
+    def fc_perf_efficiency(self) -> float:
+        cyc = self.fc_cycles
+        return self.fc_macs / (modes.MMIE_NUM_PES * cyc) if cyc else 0.0
+
+    @property
+    def performance_efficiency(self) -> float:
+        cyc = self.conv_cycles + self.fc_cycles
+        return self.total_macs / (modes.MMIE_NUM_PES * cyc) if cyc else 0.0
+
+    def table4_row(self) -> Dict[str, float]:
+        """The network's Table-4 row, straight off the plan."""
+        return {
+            "net": self.name,
+            "conv_ms": self.conv_latency_s * 1e3,
+            "fc_ms": self.fc_latency_s * 1e3,
+            "conv_MA_MB": self.conv_ma_bytes / 1e6,
+            "fc_MA_MB": self.fc_ma_bytes / 1e6,
+            "conv_eff": self.conv_perf_efficiency,
+            "fc_eff": self.fc_perf_efficiency,
+        }
+
+    def report(self) -> str:
+        lines = ["kind,backend,mode(Wf,S),cycles,ma_words,macs,eff"]
+        for p in self.plans:
+            lines.append(
+                f"{p.kind},{p.backend},({p.mode.w_f},{p.mode.s}),"
+                f"{p.cycles},{p.ma_words},{p.macs},"
+                f"{p.performance_efficiency:.3f}")
+        return "\n".join(lines)
+
+
+def _select_backend(op: OpSpec, cfg: EngineConfig) -> str:
+    if cfg.policy == "auto":
+        return auto_backend(op, cfg.backend)
+    return cfg.backend
+
+
+def plan_network(program: Program,
+                 cfg: Optional[EngineConfig] = None) -> NetworkPlan:
+    """Plan every op of `program` under `cfg` (no execution, no arrays)."""
+    cfg = current_config() if cfg is None else cfg
+    return NetworkPlan(program.name, tuple(
+        plan_op(op, _select_backend(op, cfg)) for op in program.ops))
+
+
+# ---------------------------------------------------------------------------
+# compile -> CompiledNet
+# ---------------------------------------------------------------------------
+
+class CompiledNet:
+    """A network compiled against one `EngineConfig`.
+
+    .plan   — `NetworkPlan` over the program's op graph (Table-4 analytics).
+    .cost   — the plan's aggregate Table-4 row (dict).
+    .apply  — jitted executor: every engine op runs on its planned backend,
+              in the captured order. Shape-specialized like any compiled
+              artifact: executing with shapes that change the op sequence
+              raises (recompile instead).
+    """
+
+    def __init__(self, program: Program, config: EngineConfig,
+                 plan: NetworkPlan,
+                 exec_pairs: Optional[Tuple[Tuple[OpSpec, EnginePlan], ...]]):
+        self.program = program
+        self.config = config
+        self.plan = plan
+        self.exec_pairs = exec_pairs
+        self._jitted = (None if program.fn is None
+                        else jax.jit(self._run))
+
+    def _run(self, *args):
+        with using_config(self.config), api.replaying(self.exec_pairs):
+            return self.program.fn(*args)
+
+    @property
+    def cost(self) -> Dict[str, float]:
+        return self.plan.table4_row()
+
+    def apply(self, *args):
+        if self._jitted is None:
+            raise ValueError(
+                f"program {self.program.name!r} carries no executable fn "
+                "(analytic op tables only) — build it with trace_program or "
+                "a model-side builder like cnn.program to execute")
+        return self._jitted(*args)
+
+    __call__ = apply
+
+    def backends(self) -> Tuple[str, ...]:
+        """Per-op backend assignment of the execution plan, in call order."""
+        pairs = self.exec_pairs if self.exec_pairs is not None else ()
+        return tuple(plan.backend for _, plan in pairs)
+
+
+def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
+            cfg: Optional[EngineConfig] = None) -> CompiledNet:
+    """Two-phase entry point: plan the whole network under `cfg`, return a
+    `CompiledNet` with the analytic `NetworkPlan` and a jitted `.apply`.
+
+    The analytic plan covers `program.ops` (which may follow the paper's
+    layer counting, e.g. ResNet main-path booking). The execution plan is
+    captured fresh from `program.fn` at the program's avals, so `.apply`
+    always matches the real op sequence — including layers the paper's
+    counting omits (projection shortcuts).
+    """
+    cfg = current_config() if cfg is None else cfg
+    net_plan = plan_network(program, cfg)
+    exec_pairs = None
+    if program.fn is not None:
+        exec_ops = _capture_ops(program.fn, program.in_avals)
+        exec_pairs = tuple(
+            (op, plan_op(op, _select_backend(op, cfg))) for op in exec_ops)
+    return CompiledNet(program, cfg, net_plan, exec_pairs)

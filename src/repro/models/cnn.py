@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -146,10 +147,20 @@ def analytics_layers(name: str, main_path_only: bool = True,
             for b in range(n_blocks):
                 s = first_stride if b == 0 else 1
                 pre = f"s{si+2}b{b+1}"
-                # paper's counting keeps 1x1/3x3 at S=1; real geometry strides.
-                convs.append(ConvLayerSpec(f"{pre}_1x1a", h, w, c_in, c_mid,
-                                           1, 1, s if not main_path_only else s))
                 h2, w2 = (h + s - 1) // s, (w + s - 1) // s
+                # Paper Table-2 counting books every 1x1/3x3 bottleneck conv
+                # as an S=1 mode: the strided-out pixels of a W_f<=S conv
+                # never reach any output, so the engine streams the
+                # decimated map (h2 x w2) at S=1 — same MACs and cycles as
+                # the real stride-2 geometry, but the spec now *says* S=1,
+                # matching the (1,1)/(3,1) modes the paper lists. The real
+                # geometry keeps the stride for the functional model.
+                if main_path_only:
+                    convs.append(ConvLayerSpec(f"{pre}_1x1a", h2, w2, c_in,
+                                               c_mid, 1, 1, 1))
+                else:
+                    convs.append(ConvLayerSpec(f"{pre}_1x1a", h, w, c_in,
+                                               c_mid, 1, 1, s))
                 convs.append(ConvLayerSpec(f"{pre}_3x3", h2, w2, c_mid, c_mid,
                                            3, 3, 1, 1))
                 convs.append(ConvLayerSpec(f"{pre}_1x1b", h2, w2, c_mid, c_out,
@@ -203,15 +214,42 @@ def _maxpool(x: jax.Array, k: int) -> jax.Array:
                                  (1, k, k, 1), (1, k, k, 1), "VALID")
 
 
+def _forward(net: CNNDef, params: Dict, x: jax.Array) -> jax.Array:
+    """The functional forward pass, engine-routed, context-free — shared by
+    eager `apply_cnn` and the compiled `program(...)` path."""
+    if net.kind == "plain":
+        for cd in net.convs:
+            p = params["conv"][cd.name]
+            x = E.conv2d(x, p["w"], stride=cd.stride, pad=cd.pad,
+                         groups=cd.groups) + p["b"]
+            if cd.relu:
+                x = jax.nn.relu(x)
+            if cd.pool > 1:
+                x = _maxpool(x, cd.pool)
+        x = x.reshape(x.shape[0], -1)
+    else:
+        x = _resnet50_body(params, x)
+        x = x.mean(axis=(1, 2))         # global average pool
+    for fd in net.fcs:
+        p = params["fc"][fd.name]
+        x = E.matmul(x, p["w"]) + p["b"]
+        if fd.relu:
+            x = jax.nn.relu(x)
+    return x
+
+
 def apply_cnn(name: str, params: Dict, x: jax.Array,
-              engine=None, *, backend: Optional[str] = None) -> jax.Array:
-    """Forward pass through the multi-mode engine. x: (B, H, W, 3) ->
+              engine=None, *, backend: Optional[str] = None,
+              config: Optional[E.EngineConfig] = None) -> jax.Array:
+    """Eager forward pass through the multi-mode engine. x: (B, H, W, 3) ->
     logits (B, 1000).
 
-    `backend` selects the engine backend ("pallas" | "xla" | "ref"); wrap
+    `config` threads a full `engine.EngineConfig`; `backend` is the compat
+    shim selecting just the engine backend ("pallas" | "xla" | "ref"); wrap
     the call in `E.tracking()` to collect the MMIE analytics ledger. The
     `engine` argument still accepts a legacy `core.MultiModeEngine` (its
-    backend and ledger are honored) but is deprecated.
+    backend and ledger are honored) but is deprecated. For the jitted,
+    whole-network-planned path use `engine.compile(program(name), cfg)`.
     """
     if engine is not None:          # legacy shim path
         backend = engine.config.backend
@@ -219,27 +257,50 @@ def apply_cnn(name: str, params: Dict, x: jax.Array,
                  else contextlib.nullcontext())
     else:
         track = contextlib.nullcontext()
+    if config is not None and backend is not None:
+        raise ValueError("pass config or backend (or a legacy engine), "
+                         "not both")
+    ctx = E.using_config(config) if config is not None \
+        else E.using_backend(backend)
+    with track, ctx:
+        return _forward(CNNS[name], params, x)
+
+
+def program(name: str, *, batch: int = 1, dtype=jnp.float32,
+            main_path_only: bool = True) -> E.Program:
+    """The network as an `engine.Program`: an ordered, shape-complete op
+    graph derived from the `CNNDef` layer tables, plus the executable
+    functional forward.
+
+    With `main_path_only=True` (default) the op graph follows the paper's
+    Table-2/Table-4 counting — `engine.compile(program(net)).plan`
+    reproduces `analytics.network_cost` exactly (ResNet-50 books the 49
+    main-path convs, S=1 modes, no projection shortcuts). The *execution*
+    side always runs the real geometry: `compile()` captures the functional
+    forward's own op sequence, so `.apply` matches `apply_cnn` bitwise.
+    `main_path_only=False` makes the op graph itself follow the real
+    geometry (what a `tracking()` ledger of one forward would record).
+    """
     net = CNNS[name]
-    with track, E.using_backend(backend):
-        if net.kind == "plain":
-            for cd in net.convs:
-                p = params["conv"][cd.name]
-                x = E.conv2d(x, p["w"], stride=cd.stride, pad=cd.pad,
-                             groups=cd.groups) + p["b"]
-                if cd.relu:
-                    x = jax.nn.relu(x)
-                if cd.pool > 1:
-                    x = _maxpool(x, cd.pool)
-            x = x.reshape(x.shape[0], -1)
-        else:
-            x = _resnet50_body(params, x)
-            x = x.mean(axis=(1, 2))     # global average pool
-        for fd in net.fcs:
-            p = params["fc"][fd.name]
-            x = E.matmul(x, p["w"]) + p["b"]
-            if fd.relu:
-                x = jax.nn.relu(x)
-    return x
+    h, w, c = net.input_hw_c
+    conv_specs, fc_specs = analytics_layers(name, main_path_only)
+    ops: List[E.OpSpec] = []
+    for cs in conv_specs:
+        ops.append(E.OpSpec(
+            "conv2d",
+            (batch, cs.h_in, cs.w_in, cs.c_in),
+            (cs.h_f, cs.w_f, cs.c_in // cs.groups, cs.c_out),
+            stride=cs.s, pad=cs.pad, groups=cs.groups, name=cs.name))
+    for fs in fc_specs:
+        ops.append(E.OpSpec(
+            "dense", (batch, fs.n), (fs.n, fs.m),
+            spec=E.dense_spec(2), name=fs.name))
+    params_avals = jax.eval_shape(
+        lambda key: init_cnn(name, key, dtype), jax.random.PRNGKey(0))
+    x_aval = jax.ShapeDtypeStruct((batch, h, w, c), dtype)
+    fn = functools.partial(_forward, net)
+    return E.Program(name=name, ops=tuple(ops), fn=fn,
+                     in_avals=(params_avals, x_aval))
 
 
 def _resnet50_body(params: Dict, x: jax.Array) -> jax.Array:

@@ -32,12 +32,28 @@ def decode_state_shapes(cfg: ModelConfig, batch: int, max_len: int):
         lambda: T.init_decode_state(cfg, batch, max_len))
 
 
+def _engine_ctx(engine_config: Optional[E.EngineConfig],
+                engine_backend: Optional[str]):
+    """Ambient-engine context factory for a traced step. `engine_config`
+    threads a full frozen `engine.EngineConfig`; `engine_backend` is the
+    deprecated string shim (backend only) kept for existing call sites."""
+    if engine_config is not None and engine_backend is not None:
+        raise ValueError("pass engine_config or engine_backend, not both "
+                         "(engine_backend is the deprecated string shim)")
+    if engine_config is not None:
+        return E.using_config(engine_config)
+    return E.using_backend(engine_backend)
+
+
 def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
                      rules: Optional[S.ShardingRules] = None,
+                     engine_config: Optional[E.EngineConfig] = None,
                      engine_backend: Optional[str] = None):
     """Returns (jitted step, contract). step(params, state, tokens, pos) ->
-    (logits, state'); state donated. `engine_backend` selects the
-    multi-mode-engine backend for every dense op traced into the step."""
+    (logits, state'); state donated. `engine_config` selects the
+    multi-mode-engine configuration (backend, interpret, accum, policy) for
+    every dense op traced into the step; `engine_backend` remains as the
+    deprecated backend-string shim."""
     rules = rules or S.make_rules(mesh)
     defs = T.model_defs(cfg)
     param_specs = S.tree_specs(defs, rules, mesh)
@@ -48,7 +64,7 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
                        tp_axis=rules.tp_axis, remat=False, shard_fn=shard_fn)
 
     def step(params, state, tokens, pos):
-        with E.using_backend(engine_backend):
+        with _engine_ctx(engine_config, engine_backend):
             logits, state2 = T.decode_step(cfg, params, state, tokens, pos,
                                            ctx)
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
@@ -68,8 +84,10 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
 
 def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
                   max_len: int, rules: Optional[S.ShardingRules] = None,
+                  engine_config: Optional[E.EngineConfig] = None,
                   engine_backend: Optional[str] = None):
-    """Prefill (or encoder forward): returns (jitted fn, contract)."""
+    """Prefill (or encoder forward): returns (jitted fn, contract).
+    `engine_config` / deprecated `engine_backend` as in `build_serve_step`."""
     rules = rules or S.make_rules(mesh)
     defs = T.model_defs(cfg)
     param_specs = S.tree_specs(defs, rules, mesh)
@@ -79,12 +97,12 @@ def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
 
     if cfg.is_encoder:
         def fn(params, batch_in):
-            with E.using_backend(engine_backend):
+            with _engine_ctx(engine_config, engine_backend):
                 hidden, _ = T.forward(cfg, params, batch_in, ctx)
                 return T.logits_fn(cfg, params, hidden)
     else:
         def fn(params, batch_in):
-            with E.using_backend(engine_backend):
+            with _engine_ctx(engine_config, engine_backend):
                 return T.prefill(cfg, params, batch_in, max_len, ctx)
 
     def batch_spec(x):
@@ -110,6 +128,46 @@ def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
     contract = {"param_specs": param_specs, "rules": rules, "ctx": ctx,
                 "jit_for": jit_for}
     return fn, contract
+
+
+def prefill_program(cfg: ModelConfig, batch: int, seq: int,
+                    max_len: Optional[int] = None) -> "E.Program":
+    """The serving prefill forward (or encoder forward) as an
+    `engine.Program` — the transformer/SSM counterpart of
+    `models.cnn.program`. Captured by shape alone via
+    `engine.trace_program`, so `engine.compile(prefill_program(...),
+    cfg).plan` prices one prefill without touching any weights."""
+    max_len = seq if max_len is None else max_len
+    params_sh = T.param_shapes(cfg)
+    batch_sh = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+    if cfg.is_encoder:
+        def fn(params, batch_in):
+            hidden, _ = T.forward(cfg, params, batch_in)
+            return T.logits_fn(cfg, params, hidden)
+    else:
+        def fn(params, batch_in):
+            return T.prefill(cfg, params, batch_in, max_len)
+
+    return E.trace_program(fn, params_sh, batch_sh,
+                           name=f"{cfg.name}-prefill{seq}")
+
+
+def decode_program(cfg: ModelConfig, batch: int,
+                   max_len: int) -> "E.Program":
+    """One greedy decode step (one token against a `max_len` cache) as an
+    `engine.Program`."""
+    params_sh = T.param_shapes(cfg)
+    state_sh = decode_state_shapes(cfg, batch, max_len)
+    tok_sh = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_sh = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, state, tok, pos):
+        logits, _ = T.decode_step(cfg, params, state, tok, pos)
+        return logits
+
+    return E.trace_program(fn, params_sh, state_sh, tok_sh, pos_sh,
+                           name=f"{cfg.name}-decode{max_len}")
 
 
 def greedy_generate(cfg: ModelConfig, params, batch_in: Dict, steps: int,

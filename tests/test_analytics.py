@@ -93,6 +93,44 @@ class TestTable4:
         assert min(effs) > 0.75  # strict-Eq15 floor; see EXPERIMENTS §Paper
 
 
+class TestResNetStrideCounting:
+    """Paper Table 2 books every ResNet-50 1x1/3x3 bottleneck conv as an
+    S=1 mode (strided-out pixels of a W_f<=S conv never reach an output, so
+    the engine streams the decimated map). `main_path_only=True` must
+    reflect that counting in the specs themselves; the real geometry keeps
+    the stride-2 convs for the functional model."""
+
+    def test_main_path_specs_are_table2_modes(self):
+        convs, _ = cnn.analytics_layers("resnet50", main_path_only=True)
+        modes = {(c.w_f, c.s) for c in convs}
+        assert modes == {(7, 2), (3, 1), (1, 1)}    # exactly Table 2
+        assert len(convs) == 49                     # 1x 7x7, 16x 3x3, 32x 1x1
+        assert sum(1 for c in convs if c.w_f == 3) == 16
+        assert sum(1 for c in convs if c.w_f == 1) == 32
+
+    def test_real_geometry_keeps_strides_and_projections(self):
+        convs, _ = cnn.analytics_layers("resnet50", main_path_only=False)
+        assert len(convs) == 53                     # + 4 projection shortcuts
+        strided_1x1 = [c for c in convs if c.w_f == 1 and c.s == 2]
+        # stages 3-5 downsample: a stride-2 1x1a + a stride-2 projection each
+        assert len(strided_1x1) == 6
+        assert sum(1 for c in convs if c.name.endswith("_proj")) == 4
+
+    def test_countings_agree_on_shared_layers(self):
+        """S=1-on-decimated-map booking is cost-identical to the strided
+        geometry — the relabeling must not move any Table-4 number."""
+        main, _ = cnn.analytics_layers("resnet50", main_path_only=True)
+        real, _ = cnn.analytics_layers("resnet50", main_path_only=False)
+        shared = [c for c in real if not c.name.endswith("_proj")]
+        assert [c.name for c in shared] == [c.name for c in main]
+        for m, r in zip(main, shared):
+            cm, cr = A.conv_cost(m), A.conv_cost(r)
+            assert m.macs == r.macs, m.name
+            assert cm.cycles == cr.cycles, m.name
+            assert cm.ma_total_words == cr.ma_total_words, m.name
+            assert (cm.mode.w_f, cm.mode.s) == (cr.mode.w_f, cr.mode.s)
+
+
 class TestMXUOccupancy:
     def test_aligned_is_full(self):
         assert A.mxu_occupancy(256, 256, 256) == 1.0

@@ -198,6 +198,134 @@ class TestRegistry:
 
 
 # ---------------------------------------------------------------------------
+# EngineConfig: frozen, hashable, jit-static; context semantics
+# ---------------------------------------------------------------------------
+
+class TestEngineConfig:
+    def test_frozen_hashable_equal(self):
+        a = E.EngineConfig(backend="pallas", interpret=False)
+        b = E.EngineConfig(backend="pallas", interpret=False)
+        assert a == b and hash(a) == hash(b)
+        assert {a: "v"}[b] == "v"
+        with pytest.raises(Exception):
+            a.backend = "xla"                       # frozen
+
+    def test_invalid_policy_rejected(self):
+        with pytest.raises(ValueError, match="policy"):
+            E.EngineConfig(policy="greedy")
+
+    def test_using_config_ambient(self):
+        assert E.current_config().backend == "xla"
+        with E.using_config(E.EngineConfig(backend="ref", interpret=False)):
+            assert E.current_config().backend == "ref"
+            assert not E.current_config().interpret
+            with E.using_backend("pallas"):        # shim keeps other knobs
+                assert E.current_config().backend == "pallas"
+                assert not E.current_config().interpret
+        assert E.current_config().backend == "xla"
+
+    def test_set_default_backend_errors_in_context(self):
+        # the old list stack silently ignored the write; now it's explicit
+        with E.using_backend("ref"):
+            with pytest.raises(RuntimeError, match="silently shadowed"):
+                E.set_default_backend("xla")
+            with pytest.raises(RuntimeError, match="silently shadowed"):
+                E.set_interpret(False)
+            with pytest.raises(RuntimeError, match="silently shadowed"):
+                E.set_default_config(E.EngineConfig())
+        # outside a context it is a well-defined base write
+        E.set_default_backend("ref")
+        try:
+            assert E.default_backend() == "ref"
+        finally:
+            E.set_default_backend("xla")
+
+    def test_config_as_static_jit_arg(self):
+        from functools import partial
+        traces = []
+
+        @partial(jax.jit, static_argnums=0)
+        def f(cfg, x, w):
+            traces.append(1)
+            with E.using_config(cfg):
+                return E.dense(x, w)
+
+        x, w = jnp.ones((4, 16)), jnp.ones((16, 8))
+        f(E.EngineConfig(backend="ref"), x, w)
+        f(E.EngineConfig(backend="ref"), x, w)      # equal config: cache hit
+        assert len(traces) == 1
+        f(E.EngineConfig(backend="xla"), x, w)      # distinct config: retrace
+        assert len(traces) == 2
+
+    def test_plan_cache_hits_across_retraces_under_config(self):
+        from functools import partial
+
+        @partial(jax.jit, static_argnums=0)
+        def f(cfg, x, w):
+            with E.using_config(cfg):
+                return E.dense(x, w)
+
+        x = jnp.ones((6, 24))
+        w = jnp.ones((24, 12))
+        cfg = E.EngineConfig(backend="xla")
+        f(cfg, x, w)
+        hits0 = E.plan_einsum.cache_info().hits
+        jax.clear_caches()                          # force a genuine retrace
+        f(cfg, x, w)
+        assert E.plan_einsum.cache_info().hits > hits0
+
+    def test_config_accum_policy(self):
+        x = jnp.ones((2, 8), jnp.bfloat16)
+        w = jnp.ones((8, 4), jnp.bfloat16)
+        with E.using_config(E.EngineConfig(accum="float32")):
+            y32 = E.einsum("...n,nm->...m", x, w)
+        with E.using_config(E.EngineConfig(accum="native")):
+            ynat = E.einsum("...n,nm->...m", x, w)
+        assert y32.dtype == jnp.float32             # preferred_element_type
+        assert ynat.dtype == jnp.bfloat16           # plain-@ numerics
+
+
+# ---------------------------------------------------------------------------
+# parse_einsum / plan_einsum edge cases
+# ---------------------------------------------------------------------------
+
+class TestEinsumEdgeCases:
+    def test_ellipsis_on_both_operands(self):
+        spec = "...ab,...bc->...ac"
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 2, 3), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 5), jnp.float32)
+        np.testing.assert_allclose(E.einsum(spec, x, w),
+                                   jnp.einsum(spec, x, w), rtol=1e-6)
+        p = E.plan_einsum(spec, (4, 2, 3), (4, 3, 5), "xla")
+        assert p.macs == 4 * 2 * 3 * 5
+        assert "batched weights" in p.note
+
+    def test_repeated_labels_rejected(self):
+        with pytest.raises(ValueError, match="repeated label"):
+            E.plan_einsum("aa,ab->ab", (3, 3), (3, 4), "xla")
+        with pytest.raises(ValueError, match="repeated label"):
+            E.plan_einsum("ab,bb->ab", (2, 3), (3, 3), "xla")
+
+    def test_zero_size_contract_dim(self):
+        x = jnp.zeros((2, 0), jnp.float32)
+        w = jnp.zeros((0, 3), jnp.float32)
+        y = E.einsum("ab,bc->ac", x, w)
+        np.testing.assert_array_equal(y, jnp.zeros((2, 3)))
+        p = E.plan_einsum("ab,bc->ac", (2, 0), (0, 3), "xla")
+        assert p.macs == 0 and p.cycles == 0
+        assert p.performance_efficiency == 0.0      # no div-by-zero
+
+    def test_zero_size_free_dim(self):
+        p = E.plan_einsum("ab,bc->ac", (0, 4), (4, 3), "xla")
+        assert p.macs == 0 and p.cycles == 0
+
+    def test_outer_product_books_one_mac_per_output(self):
+        # no contract labels: still a planable FC op, not zero work
+        p = E.plan_einsum("a,b->ab", (3,), (5,), "xla")
+        assert p.macs == 3 * 5
+
+
+# ---------------------------------------------------------------------------
 # Legacy shim equivalence (acceptance: identical AlexNet ledger totals)
 # ---------------------------------------------------------------------------
 
