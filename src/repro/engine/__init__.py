@@ -45,4 +45,5 @@ from repro.engine.plan import (  # noqa: F401
     EnginePlan, OpSpec, auto_backend, dense_spec, parse_einsum, plan_conv1d_depthwise,
     plan_conv2d, plan_einsum, plan_op)
 from repro.engine.program import (  # noqa: F401
-    CompiledNet, NetworkPlan, Program, compile, plan_network, trace_program)
+    CompiledNet, NetworkPlan, Program, compile, infer_batch_axes,
+    plan_network, trace_program)

@@ -156,6 +156,26 @@ def _interp(interpret: Optional[bool]) -> bool:
     return current_config().interpret if interpret is None else interpret
 
 
+def _row_pad_amount(structure: planlib.EinsumStructure,
+                    x_shape: Tuple[int, ...]) -> int:
+    """Rows to zero-pad onto x's leading axis under `cfg.row_align`.
+
+    Padding applies only when the leading x axis is a pure batch-row dim (an
+    x-free label, so rows are independent and the output can be sliced
+    back). XLA lowers the contraction's free dims to the GEMM M dimension;
+    pinning M to a multiple of R keeps the per-row accumulation kernel
+    independent of the batch size, which is what makes scheduler-batched
+    execution bitwise identical to batch-1 execution (see
+    `EngineConfig.row_align`).
+    """
+    align = current_config().row_align
+    if not align or not x_shape or x_shape[0] == 0:
+        return 0
+    if structure.x_labels[0] not in structure.x_free:
+        return 0                        # leading dim is contract/batch-label
+    return -x_shape[0] % align
+
+
 # ---------------------------------------------------------------------------
 # Ops
 # ---------------------------------------------------------------------------
@@ -200,10 +220,17 @@ def einsum(spec: str, x: jax.Array, w: jax.Array, *,
     plan = _plan_for(op, backend)
     ledger_mod.record(plan)
     structure = planlib.parse_einsum(spec, x.ndim, w.ndim)
+    pad = _row_pad_amount(structure, op.x_shape)
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
     out = dispatch.get_backend(plan.backend).einsum(
         spec, x, w, plan, structure,
         accum_dtype=_resolve_accum(accum_dtype, "einsum"),
         interpret=_interp(interpret))
+    if pad:
+        ax = structure.out_labels.index(structure.x_labels[0])
+        out = jax.lax.slice_in_dim(out, 0, op.x_shape[0], axis=ax)
     return out if out_dtype is None else out.astype(out_dtype)
 
 

@@ -45,18 +45,34 @@ class EngineConfig:
     policy    — backend selection: "fixed" uses `backend` everywhere;
                 "auto" picks pallas-vs-`backend` per op from its plan
                 (see `plan.auto_backend`).
+    row_align — None keeps native GEMM numerics. An int R makes FC-mode
+                ops *batch-invariant*: the engine zero-pads the leading
+                (batch) row dim of every dense contraction up to a multiple
+                of R before dispatch and slices the result back, so each
+                row always flows through the same fixed-granularity GEMM
+                kernel regardless of how many requests share the batch —
+                the serving analogue of the MMIE's fixed 192-PE row tiling.
+                Batched execution under `row_align` is bitwise identical,
+                row for row, to batch-1 execution (what the
+                `serve.scheduler` parity contract relies on).
     """
 
     backend: str = "xla"
     interpret: bool = True
     accum: Optional[str] = None
     policy: str = "fixed"
+    row_align: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.policy not in _POLICIES:
             raise ValueError(
                 f"unknown backend-selection policy {self.policy!r}; "
                 f"expected one of {_POLICIES}")
+        if self.row_align is not None and (
+                not isinstance(self.row_align, int) or self.row_align < 1):
+            raise ValueError(
+                f"row_align must be None or a positive int; "
+                f"got {self.row_align!r}")
         if self.accum is not None and self.accum != "native":
             import numpy as np
             try:

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from typing import Iterator, List, Optional
 
 from repro.core import analytics, modes
@@ -99,42 +100,51 @@ class Ledger:
 
 
 # ---------------------------------------------------------------------------
-# Active-ledger stack
+# Active-ledger stack (thread-local, like the EngineConfig stack: a
+# tracking() block on one thread never observes — and paused() on one
+# thread never suspends — another thread's ledgers)
 # ---------------------------------------------------------------------------
 
-_ACTIVE: List[Ledger] = []
+class _Active(threading.local):
+    def __init__(self) -> None:
+        self.stack: List[Ledger] = []
+
+
+_TLS = _Active()
 
 
 @contextlib.contextmanager
 def tracking(ledger: Optional[Ledger] = None) -> Iterator[Ledger]:
-    """Activate a ledger for every engine op issued in the block."""
+    """Activate a ledger for every engine op issued in the block (on this
+    thread)."""
     led = ledger if ledger is not None else Ledger()
-    _ACTIVE.append(led)
+    _TLS.stack.append(led)
     try:
         yield led
     finally:
-        _ACTIVE.remove(led)
+        _TLS.stack.remove(led)
 
 
 def is_tracking() -> bool:
-    return bool(_ACTIVE)
+    return bool(_TLS.stack)
 
 
 @contextlib.contextmanager
 def paused() -> Iterator[None]:
-    """Suspend all active ledgers for the block. Used by program capture
-    (`engine.trace_program` / `engine.compile`), which shape-traces the
-    network without running it — those phantom ops must not be priced into
-    a user's `tracking()` ledger."""
-    saved = _ACTIVE[:]
-    _ACTIVE.clear()
+    """Suspend this thread's active ledgers for the block. Used by program
+    capture (`engine.trace_program` / `engine.compile`), which shape-traces
+    the network without running it — those phantom ops must not be priced
+    into a user's `tracking()` ledger."""
+    saved = _TLS.stack[:]
+    _TLS.stack.clear()
     try:
         yield
     finally:
-        _ACTIVE.extend(saved)
+        _TLS.stack.extend(saved)
 
 
 def record(plan: EnginePlan) -> None:
-    """Record `plan` into every active ledger (no-op when none)."""
-    for led in _ACTIVE:
+    """Record `plan` into every ledger active on this thread (no-op when
+    none)."""
+    for led in _TLS.stack:
         led.record_plan(plan)

@@ -34,7 +34,8 @@ import jax
 from repro.core import modes
 from repro.engine import api
 from repro.engine.config import EngineConfig, current_config, using_config
-from repro.engine.plan import EnginePlan, OpSpec, auto_backend, plan_op
+from repro.engine.plan import (EnginePlan, OpSpec, auto_backend,
+                               parse_einsum, plan_op)
 
 _CONV_KINDS = ("conv2d", "conv1d_dw")
 
@@ -47,6 +48,15 @@ class Program:
     arrays); `fn`/`in_avals` carry the executable forward for
     `CompiledNet.apply` and are excluded from equality/hash so a Program is
     usable as a dict / jit-static key.
+
+    Batch metadata (`batch_size` plus per-leaf `batch_axes`) makes the
+    program *re-batchable*: `with_batch(B)` rewrites the op graph and the
+    input avals to batch B without re-tracing the model, so a serving
+    scheduler can re-plan (and `engine.compile`) one traced program at any
+    batch bucket. `batch_axes` is a tuple (one entry per positional arg) of
+    pytrees matching `in_avals`, with an int leaf per array leaf: the axis
+    carrying the batch, or -1 for unbatched leaves (weights, scalars) —
+    see `infer_batch_axes`.
     """
 
     name: str
@@ -55,13 +65,100 @@ class Program:
         default=None, compare=False)
     in_avals: Tuple[Any, ...] = dataclasses.field(
         default=(), compare=False)
+    batch_size: Optional[int] = dataclasses.field(
+        default=None, compare=False)
+    batch_axes: Optional[Tuple[Any, ...]] = dataclasses.field(
+        default=None, compare=False)
 
     def __len__(self) -> int:
         return len(self.ops)
 
+    def with_batch(self, batch: int) -> "Program":
+        """The same program re-planned at batch `batch` — op shapes and
+        input avals rewritten along the recorded batch axes, no re-trace.
+
+        Conv ops carry the batch on x axis 0 by the engine's NHWC/(B,L,D)
+        contract; a dense op is rebatched when its leading x axis is an
+        x-free (pure row) label of size `batch_size`. Ops that fold the
+        batch elsewhere (e.g. MoE capacity dims) are left unchanged — their
+        analytic cost then underestimates the rebatched network, which only
+        matters for planning, never for execution (`engine.compile`
+        re-captures the executable op sequence from `fn` at the new avals).
+        """
+        if self.batch_size is None or self.batch_axes is None:
+            raise ValueError(
+                f"program {self.name!r} carries no batch metadata; build it "
+                "with cnn.program / serve.prefill_program / serve."
+                "decode_program, or pass batch_size= and batch_axes= to "
+                "trace_program (see engine.infer_batch_axes)")
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        if batch == self.batch_size:
+            return self
+        ops = tuple(_rebatch_op(op, self.batch_size, batch)
+                    for op in self.ops)
+        in_avals = tuple(
+            jax.tree_util.tree_map(
+                lambda aval, ax: _rebatch_aval(aval, ax, self.batch_size,
+                                               batch),
+                arg, axes)
+            for arg, axes in zip(self.in_avals, self.batch_axes))
+        return dataclasses.replace(self, ops=ops, in_avals=in_avals,
+                                   batch_size=batch)
+
+
+def infer_batch_axes(avals_a: Tuple[Any, ...], avals_b: Tuple[Any, ...],
+                     ) -> Tuple[Any, ...]:
+    """Derive per-leaf batch axes by diffing the same arg avals built at two
+    different batch sizes: the single axis whose size changed is the batch
+    axis; leaves with identical shapes (weights, scalars) get -1.
+
+    Using -1 (not None) keeps the axes tree structurally identical to the
+    aval tree under `jax.tree_util` (None leaves would vanish).
+    """
+    def leaf(a, b):
+        sa, sb = tuple(a.shape), tuple(b.shape)
+        if sa == sb:
+            return -1
+        if len(sa) != len(sb):
+            raise ValueError(f"rank changed with batch: {sa} vs {sb}")
+        diffs = [i for i, (x, y) in enumerate(zip(sa, sb)) if x != y]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"ambiguous batch axis: {sa} vs {sb} differ on axes {diffs}")
+        return diffs[0]
+
+    return tuple(jax.tree_util.tree_map(leaf, a, b)
+                 for a, b in zip(avals_a, avals_b))
+
+
+def _rebatch_aval(aval: Any, axis: int, old: int, new: int) -> Any:
+    if axis < 0:
+        return aval
+    shape = list(aval.shape)
+    if shape[axis] != old:
+        raise ValueError(
+            f"batch axis {axis} of aval {tuple(aval.shape)} has size "
+            f"{shape[axis]}, expected batch_size={old}")
+    shape[axis] = new
+    return jax.ShapeDtypeStruct(tuple(shape), aval.dtype)
+
+
+def _rebatch_op(op: OpSpec, old: int, new: int) -> OpSpec:
+    """Rewrite one op's batch dim (leading x axis) from `old` to `new`."""
+    if not op.x_shape or op.x_shape[0] != old:
+        return op
+    if op.kind == "dense":
+        st = parse_einsum(op.spec, len(op.x_shape), len(op.w_shape))
+        if st.x_labels[0] not in st.x_free:
+            return op                   # leading dim is not a pure row dim
+    return dataclasses.replace(op, x_shape=(new,) + op.x_shape[1:])
+
 
 def trace_program(fn: Callable[..., Any], *avals: Any,
-                  name: str = "traced") -> Program:
+                  name: str = "traced",
+                  batch_size: Optional[int] = None,
+                  batch_axes: Optional[Tuple[Any, ...]] = None) -> Program:
     """Capture `fn`'s engine ops into a `Program` by abstract evaluation.
 
     `avals` are pytrees of `jax.ShapeDtypeStruct` (or concrete arrays) —
@@ -70,9 +167,16 @@ def trace_program(fn: Callable[..., Any], *avals: Any,
     in call order with its static shapes; ops outside the engine (elementwise
     math, pooling, attention softmax, ...) are executed abstractly but not
     recorded, exactly like a `tracking()` ledger would price them.
+
+    Pass `batch_size` (the batch the avals were built at) together with
+    `batch_axes` (per-arg axis trees, see `infer_batch_axes`) to make the
+    program re-batchable via `Program.with_batch`.
     """
+    if (batch_size is None) != (batch_axes is None):
+        raise ValueError("pass batch_size and batch_axes together")
     return Program(name=name, ops=_capture_ops(fn, avals), fn=fn,
-                   in_avals=tuple(avals))
+                   in_avals=tuple(avals), batch_size=batch_size,
+                   batch_axes=batch_axes)
 
 
 def _capture_ops(fn: Callable[..., Any], avals: Tuple[Any, ...],

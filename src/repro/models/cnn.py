@@ -280,6 +280,11 @@ def program(name: str, *, batch: int = 1, dtype=jnp.float32,
     forward's own op sequence, so `.apply` matches `apply_cnn` bitwise.
     `main_path_only=False` makes the op graph itself follow the real
     geometry (what a `tracking()` ledger of one forward would record).
+
+    The program carries batch metadata, so the batched apply path is
+    `engine.compile(program(net).with_batch(B), cfg).apply(params, xB)` —
+    re-planned, never re-traced; the `serve.scheduler` uses exactly this to
+    pack requests into batch buckets.
     """
     net = CNNS[name]
     h, w, c = net.input_hw_c
@@ -299,8 +304,12 @@ def program(name: str, *, batch: int = 1, dtype=jnp.float32,
         lambda key: init_cnn(name, key, dtype), jax.random.PRNGKey(0))
     x_aval = jax.ShapeDtypeStruct((batch, h, w, c), dtype)
     fn = functools.partial(_forward, net)
+    batch_axes = E.infer_batch_axes(
+        (params_avals, x_aval),
+        (params_avals, jax.ShapeDtypeStruct((batch + 1, h, w, c), dtype)))
     return E.Program(name=name, ops=tuple(ops), fn=fn,
-                     in_avals=(params_avals, x_aval))
+                     in_avals=(params_avals, x_aval),
+                     batch_size=batch, batch_axes=batch_axes)
 
 
 def _resnet50_body(params: Dict, x: jax.Array) -> jax.Array:

@@ -131,26 +131,44 @@ def build_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
 
 
 def prefill_program(cfg: ModelConfig, batch: int, seq: int,
-                    max_len: Optional[int] = None) -> "E.Program":
+                    max_len: Optional[int] = None,
+                    logits_only: bool = False) -> "E.Program":
     """The serving prefill forward (or encoder forward) as an
     `engine.Program` — the transformer/SSM counterpart of
     `models.cnn.program`. Captured by shape alone via
     `engine.trace_program`, so `engine.compile(prefill_program(...),
-    cfg).plan` prices one prefill without touching any weights."""
+    cfg).plan` prices one prefill without touching any weights.
+
+    `logits_only=True` drops the decode-state output (a scoring /
+    classification service: tokens in, last-token logits out) — the
+    lightweight request shape the serve scheduler's smoke benchmark packs
+    into batches. Encoder archs are always logits-only.
+    """
     max_len = seq if max_len is None else max_len
     params_sh = T.param_shapes(cfg)
-    batch_sh = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+    def batch_sh(b):
+        return {"tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32)}
 
     if cfg.is_encoder:
         def fn(params, batch_in):
             hidden, _ = T.forward(cfg, params, batch_in)
             return T.logits_fn(cfg, params, hidden)
+    elif logits_only:
+        def fn(params, batch_in):
+            return T.prefill(cfg, params, batch_in, max_len)[0]
     else:
         def fn(params, batch_in):
             return T.prefill(cfg, params, batch_in, max_len)
 
-    return E.trace_program(fn, params_sh, batch_sh,
-                           name=f"{cfg.name}-prefill{seq}")
+    axes = E.infer_batch_axes((params_sh, batch_sh(batch)),
+                              (params_sh, batch_sh(batch + 1)))
+    # the variants return different outputs: keep their identities distinct
+    # (Program equality/hash is (name, ops); fn is excluded)
+    suffix = "-logits" if logits_only and not cfg.is_encoder else ""
+    return E.trace_program(fn, params_sh, batch_sh(batch),
+                           name=f"{cfg.name}-prefill{seq}{suffix}",
+                           batch_size=batch, batch_axes=axes)
 
 
 def decode_program(cfg: ModelConfig, batch: int,
@@ -158,16 +176,20 @@ def decode_program(cfg: ModelConfig, batch: int,
     """One greedy decode step (one token against a `max_len` cache) as an
     `engine.Program`."""
     params_sh = T.param_shapes(cfg)
-    state_sh = decode_state_shapes(cfg, batch, max_len)
-    tok_sh = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
     pos_sh = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def avals(b):
+        return (params_sh, decode_state_shapes(cfg, b, max_len),
+                jax.ShapeDtypeStruct((b, 1), jnp.int32), pos_sh)
 
     def fn(params, state, tok, pos):
         logits, _ = T.decode_step(cfg, params, state, tok, pos)
         return logits
 
-    return E.trace_program(fn, params_sh, state_sh, tok_sh, pos_sh,
-                           name=f"{cfg.name}-decode{max_len}")
+    axes = E.infer_batch_axes(avals(batch), avals(batch + 1))
+    return E.trace_program(fn, *avals(batch),
+                           name=f"{cfg.name}-decode{max_len}",
+                           batch_size=batch, batch_axes=axes)
 
 
 def greedy_generate(cfg: ModelConfig, params, batch_in: Dict, steps: int,

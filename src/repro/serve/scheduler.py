@@ -1,0 +1,459 @@
+"""Plan-driven batched serving scheduler over compiled engine programs.
+
+The MMIE's headline claim is one engine time-shared across heterogeneous
+work — conv nets and FC stacks on the same 192 PEs. This module is that
+claim at serving granularity: heterogeneous requests (CNN forwards built by
+`models.cnn.program`, transformer prefill / decode steps built by
+`serve.engine.prefill_program` / `decode_program`, or anything from
+`engine.trace_program`) enter one shared queue and are packed into batches
+that dispatch onto per-program `CompiledNet`s.
+
+Everything cost-aware reads the *analytic plan*, never a profile (one
+caveat: a traced program whose layers run under `jax.lax.scan` records the
+scanned block once per trace — the documented ledger semantics — so its
+plan under-counts by the trip count; ordering/admission remain consistent
+per program, but scanned-vs-layer-table costs are not 1:1 comparable):
+
+  * admission   — `max_queue_cost_s` bounds the queue by the sum of the
+    MMIE-projected `NetworkPlan.total_latency_s` of pending requests;
+  * ordering    — the "spf" policy serves the program with the shortest
+    per-request plan latency first ("fifo" keeps arrival order);
+  * accounting  — each ticket gets an `engine.Ledger` of its own unit-plan
+    ops, so per-request MACs / cycles / efficiency come straight off the
+    plan that scheduled it.
+
+Batching is *shape-bucketed*: requests are only packed with requests of the
+same registered program (identical avals by construction) and batches are
+padded up to a fixed bucket ladder (1, 2, 4, ... max_batch by default), so
+the jit cache holds one entry per (program, bucket) and never grows with
+traffic. Buckets execute `engine.compile(program.with_batch(bucket), cfg)`
+— the batch rewrite re-plans, it never re-traces the model.
+
+Parity contract: with the default config (`row_align=8`) a request's result
+is bitwise identical whether it was served alone or packed into any bucket
+— dense rows always flow through the same fixed-granularity GEMM tile (see
+`EngineConfig.row_align`), and conv/pool/softmax work is per-example. The
+parity test in tests/test_scheduler.py pins this against batch-1
+`CompiledNet.apply`. Scope: the contract holds for *per-example* programs,
+i.e. every op's result for one request depends only on that request's rows
+— true of the CNN forwards, dense prefill/decode and attention paths here.
+Programs with cross-request coupling (e.g. MoE fixed-capacity expert
+dispatch, where one request's token drops depend on its batchmates' router
+scores) batch fine but are outside the bitwise guarantee; batching them is
+the caller's accuracy call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine as E
+from repro.engine import ledger as _ledger
+
+
+class AdmissionError(RuntimeError):
+    """Request rejected: admitting it would exceed `max_queue_cost_s`."""
+
+
+_POLICIES = ("fifo", "spf")
+
+
+@dataclasses.dataclass(eq=False)      # identity semantics: args hold arrays
+class Ticket:
+    """One admitted request and, after its batch ran, its result.
+
+    `unit_latency_s` is the MMIE-projected latency of this request's
+    batch-1 plan — the number admission and the "spf" policy order by.
+    `ledger` holds the request's unit-plan ops once served.
+    """
+
+    rid: int
+    model: str
+    args: Tuple[Any, ...]           # per-request (batched-position) args
+    submit_s: float
+    unit_latency_s: float
+    ledger: E.Ledger = dataclasses.field(default_factory=E.Ledger)
+    result: Any = None
+    done: bool = False
+    batch_index: int = -1           # row this request occupied in its batch
+    batch_fill: int = 0             # real requests in the executed batch
+    batch_bucket: int = 0           # padded bucket size the batch ran at
+    done_s: float = 0.0             # completion timestamp (perf_counter)
+
+    @property
+    def latency_s(self) -> float:
+        """Wall-clock submit-to-completion latency (queueing + execution);
+        NaN while the request is still pending."""
+        if not self.done:
+            return float("nan")
+        return self.done_s - self.submit_s
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One registered program: its unit plan plus compiled-bucket cache."""
+
+    name: str
+    program: E.Program              # normalized to batch 1
+    shared: Dict[int, Any]          # arg position -> bound value
+    batch_positions: Tuple[int, ...]
+    request_avals: Tuple[Any, ...]  # want-trees for submit() validation
+    out_axes: Any                   # per-leaf output batch axis (or -1)
+    unit_plan: E.NetworkPlan
+    compiled: Dict[int, E.CompiledNet] = dataclasses.field(
+        default_factory=dict)
+    pack_fn: Any = None             # one jitted packer (jit re-specializes
+                                    # per bucket via the input structure)
+    unpack: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    served: int = 0
+    batches: int = 0
+    padded_slots: int = 0
+
+
+def _aval_of(x) -> Tuple[Tuple[int, ...], Any]:
+    dtype = x.dtype if hasattr(x, "dtype") else jnp.result_type(x)
+    return (tuple(getattr(x, "shape", ())), jnp.dtype(dtype))
+
+
+class Scheduler:
+    """Shared-queue batched scheduler over registered engine programs.
+
+    config           — `EngineConfig` every bucket compiles under; defaults
+                       to `EngineConfig(row_align=8)` so batched results are
+                       bitwise identical to batch-1 results.
+    policy           — "fifo" (arrival order) or "spf" (shortest-plan-first:
+                       serve the program whose per-request analytic latency
+                       is smallest; FIFO within a program).
+    max_batch        — largest batch one dispatch may carry.
+    buckets          — batch-size ladder; batches are padded up to the next
+                       bucket so the jit cache stays at one entry per
+                       (program, bucket). Default: powers of two.
+    max_queue_cost_s — admission budget: `submit` raises `AdmissionError`
+                       once the queue's summed plan latency would pass it
+                       (None = admit everything).
+    """
+
+    def __init__(self, config: Optional[E.EngineConfig] = None,
+                 policy: str = "fifo", max_batch: int = 8,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_queue_cost_s: Optional[float] = None):
+        if policy not in _POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; expected one of "
+                             f"{_POLICIES}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.config = config if config is not None \
+            else E.EngineConfig(row_align=8)
+        self.policy = policy
+        self.max_batch = max_batch
+        if buckets is None:
+            buckets = []
+            b = 1
+            while b < max_batch:
+                buckets.append(b)
+                b *= 2
+            buckets.append(max_batch)
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if self.buckets[-1] != max_batch:
+            raise ValueError(f"buckets {self.buckets} must end at "
+                             f"max_batch={max_batch}")
+        self.max_queue_cost_s = max_queue_cost_s
+        self.ledger = E.Ledger()        # unit plans of everything served
+        self._entries: Dict[str, _Entry] = {}
+        self._queue: List[Ticket] = []
+        self._next_rid = 0
+        self._wall_s = 0.0              # summed dispatch wall time
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, program: E.Program,
+                 shared_args: Sequence[Any] = ()) -> "_Entry":
+        """Register `program` under `name`.
+
+        The program must be executable (carry `fn`) and re-batchable (carry
+        batch metadata); it is normalized to batch 1. Argument positions
+        with no batch axis (weights, the decode position scalar, ...) are
+        *shared*: bound once here via `shared_args` (in positional order)
+        and reused for every request. `submit` then takes only the
+        per-request batched arguments.
+
+        The bitwise-parity guarantee (module docstring) applies to
+        per-example programs; registering a program with cross-request ops
+        (MoE capacity dispatch) is allowed but its batched results may
+        legitimately differ from solo execution.
+        """
+        if name in self._entries:
+            raise ValueError(f"model {name!r} already registered")
+        if program.fn is None:
+            raise ValueError(
+                f"program {program.name!r} carries no executable fn — the "
+                "scheduler can only serve programs built with trace_program "
+                "or a model-side builder like cnn.program")
+        prog1 = program.with_batch(1)   # also validates batch metadata
+        batched, unbatched = [], []
+        for i, axes in enumerate(prog1.batch_axes):
+            leaves = jax.tree_util.tree_leaves(axes)
+            if any(a >= 0 for a in leaves):
+                if any(a < 0 for a in leaves):
+                    # packing would silently reuse request 0's value for the
+                    # unbatched leaves of every request in the batch
+                    raise ValueError(
+                        f"arg position {i} of program {prog1.name!r} mixes "
+                        "batched and unbatched leaves in one pytree; bind "
+                        "the unbatched data as its own (shared) argument "
+                        "position instead")
+                batched.append(i)
+            else:
+                unbatched.append(i)
+        if len(shared_args) != len(unbatched):
+            raise ValueError(
+                f"program {prog1.name!r} has {len(unbatched)} unbatched arg "
+                f"position(s) {tuple(unbatched)}; pass exactly that many "
+                f"shared_args (got {len(shared_args)})")
+        shared = dict(zip(unbatched, shared_args))
+        # Output batch axes, derived the same way as the input ones: diff
+        # the output avals at batch 1 vs batch 2 (pure shape evaluation —
+        # ledgers paused so the dry traces don't record phantom ops).
+        with _ledger.paused():
+            out1 = jax.eval_shape(prog1.fn, *prog1.in_avals)
+            out2 = jax.eval_shape(prog1.fn, *prog1.with_batch(2).in_avals)
+        out_axes = E.infer_batch_axes((out1,), (out2,))[0]
+        entry = _Entry(
+            name=name, program=prog1, shared=shared,
+            batch_positions=tuple(batched),
+            request_avals=tuple(
+                jax.tree_util.tree_map(_aval_of, prog1.in_avals[pos])
+                for pos in batched),
+            out_axes=out_axes,
+            unit_plan=E.plan_network(prog1, self.config))
+        self._entries[name] = entry
+        return entry
+
+    def compiled(self, name: str, bucket: int) -> E.CompiledNet:
+        """The (program, bucket) `CompiledNet` — built once, then cached."""
+        entry = self._entries[name]
+        if bucket not in entry.compiled:
+            entry.compiled[bucket] = E.compile(
+                entry.program.with_batch(bucket), self.config)
+        return entry.compiled[bucket]
+
+    def _pack_fn(self, entry: _Entry):
+        """Jitted request packer: the batch's per-request arg tuples in,
+        the batched values of the program's batched positions out — one
+        dispatch per batch instead of one per pytree leaf. Bucket-agnostic:
+        jax.jit re-specializes on the input tuple length."""
+        if entry.pack_fn is None:
+            axes_by_pos = tuple(entry.program.batch_axes[pos]
+                                for pos in entry.batch_positions)
+
+            @jax.jit
+            def pack(per):
+                out = []
+                for j, axes in enumerate(axes_by_pos):
+                    leaves = [p[j] for p in per]
+                    out.append(jax.tree_util.tree_map(
+                        lambda ax, *ls: ls[0] if ax < 0
+                        else jnp.concatenate(ls, axis=ax), axes, *leaves))
+                return tuple(out)
+
+            entry.pack_fn = pack
+        return entry.pack_fn
+
+    def _unpack_fn(self, entry: _Entry, bucket: int):
+        """Jitted result splitter: batched output in, `bucket` per-request
+        keepdim row slices out (again one dispatch per batch)."""
+        if bucket in entry.unpack:
+            return entry.unpack[bucket]
+        out_axes = entry.out_axes
+
+        @jax.jit
+        def unpack(out):
+            return tuple(
+                jax.tree_util.tree_map(
+                    lambda leaf, ax: leaf if ax < 0
+                    else jax.lax.index_in_dim(leaf, i, axis=ax,
+                                              keepdims=True),
+                    out, out_axes)
+                for i in range(bucket))
+
+        entry.unpack[bucket] = unpack
+        return unpack
+
+    def _dispatch(self, entry: _Entry, bucket: int,
+                  per: Tuple[Tuple[Any, ...], ...]) -> Tuple[Any, ...]:
+        """The jitted batch path (pack -> shared-arg splice -> apply ->
+        unpack), shared by `step` and `warmup` so the pre-paid traces are
+        exactly the serving traces."""
+        packed = iter(self._pack_fn(entry)(per))
+        args = [entry.shared[pos] if pos in entry.shared else next(packed)
+                for pos in range(len(entry.program.in_avals))]
+        out = self.compiled(entry.name, bucket).apply(*args)
+        results = self._unpack_fn(entry, bucket)(out)
+        jax.block_until_ready(results)
+        return results
+
+    def warmup(self, name: Optional[str] = None) -> None:
+        """Pre-pay every bucket's jit cost before opening traffic: runs one
+        zero-filled batch through the full `_dispatch` path for each
+        (program, bucket), so no real request stalls on XLA compilation."""
+        for n in ([name] if name else list(self._entries)):
+            entry = self._entries[n]
+            zeros = tuple(
+                jax.tree_util.tree_map(
+                    lambda a: jnp.zeros(a.shape, a.dtype),
+                    entry.program.in_avals[pos])
+                for pos in entry.batch_positions)
+            for bucket in self.buckets:
+                self._dispatch(entry, bucket, (zeros,) * bucket)
+
+    # -- admission ----------------------------------------------------------
+
+    def queue_cost_s(self) -> float:
+        """Summed MMIE-projected latency of every pending request."""
+        return sum(t.unit_latency_s for t in self._queue)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, name: str, *args: Any) -> Ticket:
+        """Admit one request for program `name`.
+
+        `args` are the per-request values of the program's batched argument
+        positions, in order, each shaped exactly like the program's batch-1
+        avals (leading batch axis of size 1 on the recorded batch axes).
+        Raises `AdmissionError` when the queue's plan-cost budget is full,
+        `KeyError` for unknown programs, `ValueError` for shape mismatches.
+        """
+        try:
+            entry = self._entries[name]
+        except KeyError:
+            raise KeyError(f"unknown model {name!r}; registered: "
+                           f"{sorted(self._entries)}") from None
+        if len(args) != len(entry.batch_positions):
+            raise ValueError(
+                f"{name!r} takes {len(entry.batch_positions)} per-request "
+                f"arg(s) (positions {entry.batch_positions} of the program "
+                f"signature); got {len(args)}")
+        for val, pos, want in zip(args, entry.batch_positions,
+                                  entry.request_avals):
+            got = jax.tree_util.tree_map(_aval_of, val)
+            if want != got:
+                raise ValueError(
+                    f"request arg for position {pos} of {name!r} does not "
+                    f"match the program's batch-1 avals:\n  want {want}\n"
+                    f"  got  {got}")
+        unit = entry.unit_plan.total_latency_s
+        if self.max_queue_cost_s is not None \
+                and self.queue_cost_s() + unit > self.max_queue_cost_s:
+            raise AdmissionError(
+                f"queue plan-cost {self.queue_cost_s():.6f}s + request "
+                f"{unit:.6f}s exceeds max_queue_cost_s="
+                f"{self.max_queue_cost_s:.6f}s ({len(self._queue)} pending)")
+        ticket = Ticket(rid=self._next_rid, model=name, args=tuple(args),
+                        submit_s=time.perf_counter(), unit_latency_s=unit)
+        self._next_rid += 1
+        self._queue.append(ticket)
+        return ticket
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _pick_model(self) -> str:
+        if self.policy == "spf":
+            return min(self._queue,
+                       key=lambda t: (t.unit_latency_s, t.rid)).model
+        return self._queue[0].model
+
+    def _bucket_for(self, k: int) -> int:
+        for b in self.buckets:
+            if b >= k:
+                return b
+        return self.buckets[-1]
+
+    def step(self) -> List[Ticket]:
+        """Form and execute one batch; returns the tickets it served."""
+        if not self._queue:
+            return []
+        name = self._pick_model()
+        entry = self._entries[name]
+        batch = [t for t in self._queue if t.model == name][:self.max_batch]
+        self._queue = [t for t in self._queue if t not in batch]
+        k = len(batch)
+        bucket = self._bucket_for(k)
+
+        t0 = time.perf_counter()
+        # pad at the ticket level: repeat the first request's arg pytrees
+        # (array references, no copies) so the jitted packer always sees
+        # exactly `bucket` request tuples
+        per = tuple(t.args for t in batch) + (batch[0].args,) * (bucket - k)
+        results = self._dispatch(entry, bucket, per)
+        wall = time.perf_counter() - t0
+        self._wall_s += wall
+        entry.batches += 1
+        entry.served += k
+        entry.padded_slots += bucket - k
+
+        for i, ticket in enumerate(batch):
+            ticket.result = results[i]
+            ticket.args = ()    # served: release the request inputs
+            ticket.done = True
+            ticket.batch_index = i
+            ticket.batch_fill = k
+            ticket.batch_bucket = bucket
+            ticket.done_s = time.perf_counter()
+            for plan in entry.unit_plan.plans:
+                ticket.ledger.record_plan(plan)
+                self.ledger.record_plan(plan)
+        return batch
+
+    def drain(self) -> List[Ticket]:
+        """Serve until the queue is empty; tickets in completion order."""
+        done: List[Ticket] = []
+        while self._queue:
+            done.extend(self.step())
+        return done
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        per_model = {
+            n: {
+                "served": e.served,
+                "batches": e.batches,
+                "padded_slots": e.padded_slots,
+                "occupancy": (e.served / (e.served + e.padded_slots)
+                              if e.served else 0.0),
+                "unit_plan_latency_s": e.unit_plan.total_latency_s,
+                "compiled_buckets": sorted(e.compiled),
+            }
+            for n, e in self._entries.items()
+        }
+        served = sum(e.served for e in self._entries.values())
+        return {
+            "policy": self.policy,
+            "max_batch": self.max_batch,
+            "buckets": list(self.buckets),
+            "served": served,
+            "batches": sum(e.batches for e in self._entries.values()),
+            "dispatch_wall_s": self._wall_s,
+            "throughput_rps": served / self._wall_s if self._wall_s else 0.0,
+            "pending": len(self._queue),
+            "plan_macs_served": self.ledger.total_macs,
+            "plan_cycles_served": self.ledger.total_cycles,
+            "models": per_model,
+        }
+
+
+def latency_percentiles(tickets: Sequence[Ticket],
+                        pcts: Sequence[float] = (50, 95, 99),
+                        ) -> Dict[str, float]:
+    """Wall-clock submit-to-completion percentiles over served tickets."""
+    import numpy as np
+    lats = sorted(t.latency_s for t in tickets if t.done)
+    if not lats:
+        return {f"p{p:g}_ms": 0.0 for p in pcts}
+    return {f"p{p:g}_ms": float(np.percentile(np.asarray(lats), p) * 1e3)
+            for p in pcts}

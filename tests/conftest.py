@@ -1,0 +1,87 @@
+"""Shared tier-1 fixtures.
+
+Centralizes the setup every test module used to copy-paste:
+
+  * the CPU platform pin (set once here, at collection time, before any
+    module touches a jax device);
+  * the single-host device mesh (`host_mesh`);
+  * the reduced `smollm_135m` config plus its initialized params — the
+    suite's standard tiny transformer;
+  * `EngineConfig` presets (`engine_presets` / `serving_config`);
+  * the multi-device subprocess runner (`run_distributed`) that
+    `test_distributed.py` uses to get an 8-device host, since jax locks the
+    device count at first init.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    """The 1-device (single-host) mesh used by serve/train builders."""
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="session")
+def smollm_reduced():
+    """Reduced `smollm_135m` — the suite's tiny CPU transformer config."""
+    from repro.configs.base import reduced
+    return reduced("smollm_135m")
+
+
+@pytest.fixture(scope="session")
+def smollm_params(smollm_reduced):
+    """Initialized fp32 params for `smollm_reduced` (built once)."""
+    import jax.numpy as jnp
+    from repro.models import transformer as T
+    return T.init_params(smollm_reduced, jax.random.PRNGKey(0), jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def engine_presets():
+    """Named `EngineConfig` presets shared across the suite."""
+    from repro import engine as E
+    return {
+        "xla": E.EngineConfig(),
+        "ref": E.EngineConfig(backend="ref"),
+        "pallas": E.EngineConfig(backend="pallas", interpret=True),
+        "auto": E.EngineConfig(policy="auto"),
+        "serving": E.EngineConfig(row_align=8),
+    }
+
+
+@pytest.fixture(scope="session")
+def serving_config(engine_presets):
+    """The batch-invariant config the serve scheduler compiles under."""
+    return engine_presets["serving"]
+
+
+@pytest.fixture(scope="session")
+def run_distributed():
+    """Run a python snippet in a subprocess with 8 forced host devices and
+    return the json payload it prints on a ``RESULT `` line."""
+    def run(code: str, *, devices: int = 8, timeout: int = 900) -> dict:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count"
+                              f"={devices}")
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=timeout)
+        assert out.returncode == 0, out.stderr[-4000:]
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("RESULT ")]
+        assert line, out.stdout[-2000:]
+        return json.loads(line[-1][len("RESULT "):])
+    return run

@@ -1,31 +1,9 @@
 """Multi-device semantics (8 host devices in a subprocess, since jax locks
-the device count at first init): sharded train step, MoE EP-vs-dense
-parity, int8 DP gradient sync, sharding-rule divisibility on a real mesh,
-elastic checkpoint restore across meshes."""
-import json
-import os
-import subprocess
-import sys
+the device count at first init — see the `run_distributed` fixture in
+conftest.py): sharded train step, MoE EP-vs-dense parity, int8 DP gradient
+sync, sharding-rule divisibility on a real mesh, elastic checkpoint restore
+across meshes."""
 import textwrap
-from pathlib import Path
-
-import pytest
-
-SRC = str(Path(__file__).resolve().parents[1] / "src")
-
-
-def _run(code: str) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=8")
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-4000:]
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
-    assert line, out.stdout[-2000:]
-    return json.loads(line[-1][len("RESULT "):])
-
 
 PREAMBLE = """
 import json
@@ -35,8 +13,8 @@ mesh = jax.make_mesh((4, 2), ("data", "model"))
 """
 
 
-def test_sharded_train_step_matches_single_device():
-    res = _run(PREAMBLE + textwrap.dedent("""
+def test_sharded_train_step_matches_single_device(run_distributed):
+    res = run_distributed(PREAMBLE + textwrap.dedent("""
         from repro.configs.base import reduced
         from repro.models import transformer as T
         from repro.train import step as TS
@@ -65,8 +43,8 @@ def test_sharded_train_step_matches_single_device():
     assert abs(res["sharded"] - res["single"]) < 2e-3, res
 
 
-def test_moe_ep_matches_dense():
-    res = _run(PREAMBLE + textwrap.dedent("""
+def test_moe_ep_matches_dense(run_distributed):
+    res = run_distributed(PREAMBLE + textwrap.dedent("""
         import dataclasses
         from repro.configs.base import reduced
         from repro.models import transformer as T, moe as M
@@ -94,8 +72,8 @@ def test_moe_ep_matches_dense():
     assert abs(res["aux_d"] - res["aux_e"]) < 0.1, res
 
 
-def test_int8_dp_sync():
-    res = _run(PREAMBLE + textwrap.dedent("""
+def test_int8_dp_sync(run_distributed):
+    res = run_distributed(PREAMBLE + textwrap.dedent("""
         from repro.parallel.compression import dp_sync_int8
         g = {'w': jnp.linspace(-1.0, 1.0, 64).reshape(8, 8)}
         synced = dp_sync_int8(g, mesh, ('data',))
@@ -106,8 +84,8 @@ def test_int8_dp_sync():
     assert res["err"] < 2e-2, res
 
 
-def test_sharding_divisibility_on_real_mesh():
-    res = _run(PREAMBLE + textwrap.dedent("""
+def test_sharding_divisibility_on_real_mesh(run_distributed):
+    res = run_distributed(PREAMBLE + textwrap.dedent("""
         from repro.parallel import sharding as S
         from repro.models import layers as L
         rules = S.make_rules(mesh)
@@ -122,8 +100,8 @@ def test_sharding_divisibility_on_real_mesh():
     assert res["s2"][0] == "model"
 
 
-def test_elastic_restore_across_meshes(tmp_path):
-    res = _run(PREAMBLE + textwrap.dedent(f"""
+def test_elastic_restore_across_meshes(run_distributed, tmp_path):
+    res = run_distributed(PREAMBLE + textwrap.dedent(f"""
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint.manager import CheckpointManager
         tree = {{'w': jnp.arange(64.0).reshape(8, 8)}}

@@ -12,7 +12,7 @@ from repro import engine as E
 from repro.core import EngineConfig, MultiModeEngine
 from repro.models import cnn
 
-jax.config.update("jax_platform_name", "cpu")
+# CPU platform pin + shared fixtures live in conftest.py
 
 TABLE3_MODES = [(11, 4), (7, 2), (5, 1), (3, 1), (1, 1)]
 BACKENDS = ("ref", "xla", "pallas")

@@ -1,0 +1,61 @@
+"""Golden-plan regression gate: `NetworkPlan.table4_row()` must match the
+checked-in goldens bit-for-bit, so plan/analytics refactors can't silently
+drift the paper's Table-4 numbers.
+
+The goldens in tests/goldens/table4_<net>.json were emitted from the plan
+itself (json round-trips float64 exactly via repr), so equality here is
+bitwise on every float. To *intentionally* change the cost model,
+regenerate them:
+
+    PYTHONPATH=src python -c "
+    import json
+    from repro import engine as E
+    from repro.models import cnn
+    for net in ('alexnet', 'vgg16', 'resnet50'):
+        row = E.plan_network(cnn.program(net), E.EngineConfig()).table4_row()
+        with open(f'tests/goldens/table4_{net}.json', 'w') as f:
+            json.dump(row, f, indent=2, sort_keys=True); f.write('\\n')"
+"""
+import json
+import struct
+from pathlib import Path
+
+import pytest
+
+from repro import engine as E
+from repro.models import cnn
+
+GOLDENS = Path(__file__).parent / "goldens"
+NETS = ("alexnet", "vgg16", "resnet50")
+
+
+def _bits(v):
+    """Exact float64 bit pattern (floats that merely compare close differ)."""
+    if isinstance(v, float):
+        return struct.pack("<d", v)
+    return v
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_table4_row_matches_golden_bit_for_bit(net):
+    want = json.loads((GOLDENS / f"table4_{net}.json").read_text())
+    got = E.plan_network(cnn.program(net), E.EngineConfig()).table4_row()
+    assert set(got) == set(want)
+    for key in want:
+        assert _bits(got[key]) == _bits(want[key]), (
+            f"{net}.{key}: plan={got[key]!r} golden={want[key]!r} — the "
+            "cost model drifted from the checked-in Table-4 golden")
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_golden_matches_closed_form_analytics(net):
+    # the goldens are not self-referential: they must also equal the
+    # independent closed-form model in core.analytics
+    from repro.core.analytics import network_cost
+    convs, fcs = cnn.analytics_layers(net)
+    nc = network_cost(net, convs, fcs)
+    want = json.loads((GOLDENS / f"table4_{net}.json").read_text())
+    assert _bits(want["conv_ms"]) == _bits(nc.conv_latency_s * 1e3)
+    assert _bits(want["fc_ms"]) == _bits(nc.fc_latency_s * 1e3)
+    assert _bits(want["conv_eff"]) == _bits(nc.conv_perf_efficiency)
+    assert _bits(want["fc_eff"]) == _bits(nc.fc_perf_efficiency)

@@ -1,0 +1,133 @@
+"""Property tests for plan invariants (hypothesis; skipped when the
+dependency is absent, same policy as the other hypothesis suites):
+
+  * performance efficiency is a true ratio: 0 <= eff <= 1;
+  * cycles are monotone non-decreasing in every shape dimension;
+  * zero-size dims propagate zero-work plans (no rounding up);
+  * plans and op specs are value objects: re-construction from the same
+    values gives equal objects with equal hashes (jit-cache stability).
+"""
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import engine as E  # noqa: E402
+
+SETTINGS = settings(max_examples=40, deadline=None)
+
+# Conv mode space: any W_f <= 11 with S <= W_f (a stride beyond the filter
+# width skips input entirely; the planner books W_f<=S by decimation).
+conv_geom = st.tuples(
+    st.integers(1, 3),              # batch
+    st.integers(1, 24),             # h = w
+    st.integers(1, 32),             # c_in
+    st.integers(1, 48),             # c_out
+    st.integers(1, 11),             # w_f
+    st.integers(1, 4),              # stride
+)
+
+
+def _conv_plan(b, hw, c_in, c_out, w_f, s, backend="xla"):
+    hw = max(hw, w_f)               # at least one output pixel
+    return E.plan_conv2d((b, hw, hw, c_in), (w_f, w_f, c_in, c_out),
+                         s, w_f // 2, 1, backend)
+
+
+class TestEfficiencyBounded:
+    @SETTINGS
+    @given(conv_geom)
+    def test_conv_efficiency_is_a_ratio(self, g):
+        p = _conv_plan(*g)
+        assert 0.0 <= p.performance_efficiency <= 1.0
+
+    @SETTINGS
+    @given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 512),
+           st.integers(1, 256))
+    def test_dense_efficiency_is_a_ratio(self, b, t, n, m):
+        p = E.plan_einsum("...n,nm->...m", (b, t, n), (n, m), "xla")
+        assert 0.0 <= p.performance_efficiency <= 1.0
+
+    @SETTINGS
+    @given(conv_geom)
+    def test_network_rollup_efficiency_is_a_ratio(self, g):
+        nplan = E.NetworkPlan("prop", (
+            _conv_plan(*g),
+            E.plan_einsum("...n,nm->...m", (g[0], 64), (64, 32), "xla")))
+        assert 0.0 <= nplan.performance_efficiency <= 1.0
+        assert 0.0 <= nplan.conv_perf_efficiency <= 1.0
+        assert 0.0 <= nplan.fc_perf_efficiency <= 1.0
+
+
+class TestCyclesMonotone:
+    @SETTINGS
+    @given(conv_geom, st.integers(0, 5), st.integers(0, 3))
+    def test_conv_cycles_monotone_in_each_dim(self, g, grow, dim):
+        b, hw, c_in, c_out, w_f, s = g
+        hw = max(hw, w_f)
+        base = _conv_plan(b, hw, c_in, c_out, w_f, s)
+        grown = [b, hw, c_in, c_out]
+        grown[dim] += grow
+        bigger = _conv_plan(*grown, w_f, s)
+        assert bigger.cycles >= base.cycles
+        assert bigger.macs >= base.macs
+        assert bigger.ma_words >= base.ma_words
+
+    @SETTINGS
+    @given(st.integers(1, 16), st.integers(1, 128), st.integers(1, 128),
+           st.integers(0, 64), st.integers(0, 3))
+    def test_dense_cycles_monotone_in_each_dim(self, bt, n, m, grow, dim):
+        dims = [bt, n, m]
+        dims[min(dim, 2)] += grow
+        b2, n2, m2 = dims
+        base = E.plan_einsum("...n,nm->...m", (bt, n), (n, m), "xla")
+        bigger = E.plan_einsum("...n,nm->...m", (b2, n2), (n2, m2), "xla")
+        assert bigger.cycles >= base.cycles
+        assert bigger.macs >= base.macs
+
+
+class TestZeroWork:
+    @SETTINGS
+    @given(st.integers(0, 2), st.integers(0, 32), st.integers(0, 32),
+           st.sampled_from([0, 1, 2]))
+    def test_zero_size_dim_means_zero_work(self, b, n, m, zero_at):
+        dims = [max(b, 1), max(n, 1), max(m, 1)]
+        dims[zero_at] = 0
+        b, n, m = dims
+        p = E.plan_einsum("...n,nm->...m", (b, n), (n, m), "xla")
+        assert p.macs == 0 and p.cycles == 0 and p.ma_words == 0
+        assert p.performance_efficiency == 0.0      # and no div-by-zero
+
+
+class TestValueSemantics:
+    @SETTINGS
+    @given(conv_geom, st.sampled_from(["xla", "ref", "pallas"]))
+    def test_plan_stable_under_reconstruction(self, g, backend):
+        a = _conv_plan(*g, backend)
+        b = _conv_plan(*g, backend)
+        assert a == b and hash(a) == hash(b)
+        assert {a: "v"}[b] == "v"
+
+    @SETTINGS
+    @given(conv_geom)
+    def test_opspec_roundtrips_through_replace(self, g):
+        b, hw, c_in, c_out, w_f, s = g
+        hw = max(hw, w_f)
+        op = E.OpSpec("conv2d", (b, hw, hw, c_in),
+                      (w_f, w_f, c_in, c_out), stride=s, pad=w_f // 2)
+        clone = dataclasses.replace(op)
+        assert op == clone and hash(op) == hash(clone)
+        assert E.plan_op(op, "xla") == E.plan_op(clone, "xla")
+        assert hash(E.plan_op(op, "xla")) == hash(E.plan_op(clone, "xla"))
+
+    @SETTINGS
+    @given(st.integers(1, 4))
+    def test_network_plan_hash_stable(self, batch):
+        from repro.models import cnn
+        a = E.plan_network(cnn.program("alexnet", batch=batch),
+                           E.EngineConfig())
+        b = E.plan_network(cnn.program("alexnet", batch=batch),
+                           E.EngineConfig())
+        assert a == b and hash(a) == hash(b)

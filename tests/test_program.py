@@ -11,7 +11,7 @@ from repro import engine as E
 from repro.core.analytics import network_cost
 from repro.models import cnn
 
-jax.config.update("jax_platform_name", "cpu")
+# CPU platform pin + shared fixtures live in conftest.py
 
 NETS = ("alexnet", "vgg16", "resnet50")
 
@@ -150,10 +150,9 @@ class TestTraceProgram:
                 jax.ShapeDtypeStruct((16, 8), jnp.float32))
         assert len(prog.ops) == 1 and len(led) == 0
 
-    def test_transformer_prefill_program(self):
-        from repro.configs.base import reduced
+    def test_transformer_prefill_program(self, smollm_reduced):
         from repro.serve import engine as SE
-        cfg = reduced("smollm_135m")
+        cfg = smollm_reduced
         prog = SE.prefill_program(cfg, batch=2, seq=16)
         assert len(prog.ops) > 0
         assert all(op.kind == "dense" for op in prog.ops)
@@ -172,6 +171,66 @@ class TestTraceProgram:
         dprog = SE.decode_program(cfg, batch=2, max_len=32)
         assert {op.kind for op in dprog.ops} == {"dense"}
         assert E.plan_network(dprog, E.EngineConfig()).fc_cycles > 0
+
+
+# ---------------------------------------------------------------------------
+# Batch rewrite: Program.with_batch (re-plan without re-tracing)
+# ---------------------------------------------------------------------------
+
+
+class TestWithBatch:
+    def test_cnn_program_rebatch_scales_plan_linearly(self):
+        p1 = cnn.program("alexnet")
+        p4 = p1.with_batch(4)
+        assert p4.batch_size == 4
+        assert all(op.x_shape[0] == 4 for op in p4.ops)
+        assert p4.in_avals[1].shape == (4, 227, 227, 3)
+        n1 = E.plan_network(p1, E.EngineConfig())
+        n4 = E.plan_network(p4, E.EngineConfig())
+        assert n4.conv_cycles == 4 * n1.conv_cycles
+        assert n4.fc_cycles == 4 * n1.fc_cycles
+        assert n4.total_macs == 4 * n1.total_macs
+
+    def test_rebatch_identity_and_validation(self):
+        p = cnn.program("alexnet", batch=2)
+        assert p.with_batch(2) is p
+        with pytest.raises(ValueError, match="batch must be"):
+            p.with_batch(0)
+        bare = E.Program("bare", p.ops)
+        with pytest.raises(ValueError, match="no batch metadata"):
+            bare.with_batch(4)
+
+    def test_traced_decode_program_rebatch(self, smollm_reduced):
+        # decode state buries the batch at axis 1 for grouped layers —
+        # infer_batch_axes must find it per leaf, not assume axis 0.
+        from repro.serve import engine as SE
+        dp1 = SE.decode_program(smollm_reduced, batch=1, max_len=32)
+        dp8 = dp1.with_batch(8)
+        want = SE.decode_program(smollm_reduced, batch=8, max_len=32)
+        assert dp8.ops == want.ops
+        got_shapes = jax.tree_util.tree_map(
+            lambda a: tuple(a.shape), dp8.in_avals)
+        want_shapes = jax.tree_util.tree_map(
+            lambda a: tuple(a.shape), want.in_avals)
+        assert got_shapes == want_shapes
+
+    def test_infer_batch_axes_errors(self):
+        a = (jax.ShapeDtypeStruct((1, 4), jnp.float32),)
+        amb = (jax.ShapeDtypeStruct((2, 8), jnp.float32),)
+        with pytest.raises(ValueError, match="ambiguous"):
+            E.infer_batch_axes(a, amb)
+        with pytest.raises(ValueError, match="pass batch_size"):
+            E.trace_program(lambda x: x, a[0], batch_size=1)
+
+    def test_rebatched_compile_executes(self):
+        key = jax.random.PRNGKey(0)
+        params = cnn.init_cnn("alexnet", key)
+        x2 = jax.random.normal(key, (2, 227, 227, 3), jnp.float32) * 0.1
+        compiled = E.compile(cnn.program("alexnet").with_batch(2),
+                             E.EngineConfig())
+        got = compiled.apply(params, x2)
+        want = cnn.apply_cnn("alexnet", params, x2)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------
@@ -246,19 +305,15 @@ class TestConfigThreading:
         with pytest.raises(ValueError, match="not both"):
             _engine_ctx(E.EngineConfig(), "xla")
 
-    def test_serve_step_accepts_engine_config(self):
-        from repro.configs.base import reduced
-        from repro.launch.mesh import make_host_mesh
+    def test_serve_step_accepts_engine_config(self, smollm_reduced,
+                                              host_mesh, smollm_params):
         from repro.models import transformer as T
         from repro.serve import engine as SE
-        cfg = reduced("smollm_135m")
-        mesh = make_host_mesh()
+        cfg = smollm_reduced
         jitted, contract = SE.build_serve_step(
-            cfg, mesh, batch=2, max_len=32,
+            cfg, host_mesh, batch=2, max_len=32,
             engine_config=E.EngineConfig(backend="xla"))
-        key = jax.random.PRNGKey(0)
-        params = T.init_params(cfg, key, jnp.float32)
         state = T.init_decode_state(cfg, 2, 32)
         tok = jnp.zeros((2, 1), jnp.int32)
-        logits, nxt, _ = jitted(params, state, tok, jnp.int32(0))
+        logits, nxt, _ = jitted(smollm_params, state, tok, jnp.int32(0))
         assert logits.shape[0] == 2 and nxt.shape == (2,)

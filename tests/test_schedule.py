@@ -1,0 +1,60 @@
+"""First coverage for optim/schedule.py: warmup/decay endpoints and shape
+semantics of the LR schedules."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.schedule import constant, warmup_cosine
+
+KW = dict(peak_lr=3e-3, warmup_steps=100, total_steps=1000, min_ratio=0.1)
+
+
+def _lr(step, **over):
+    kw = {**KW, **over}
+    return float(warmup_cosine(jnp.asarray(step, jnp.int32), **kw))
+
+
+class TestWarmupCosine:
+    def test_endpoints(self):
+        assert _lr(0) == 0.0                                # cold start
+        assert _lr(100) == pytest.approx(KW["peak_lr"])     # warmup peak
+        assert _lr(1000) == pytest.approx(                  # decay floor
+            KW["peak_lr"] * KW["min_ratio"])
+        # past total_steps the schedule clamps at the floor
+        assert _lr(5000) == pytest.approx(KW["peak_lr"] * KW["min_ratio"])
+
+    def test_warmup_is_linear(self):
+        for step in (10, 25, 50, 99):
+            assert _lr(step) == pytest.approx(
+                KW["peak_lr"] * step / KW["warmup_steps"], rel=1e-6)
+
+    def test_decay_is_monotone_decreasing(self):
+        lrs = [_lr(s) for s in range(100, 1001, 90)]
+        assert all(a >= b for a, b in zip(lrs, lrs[1:]))
+        assert lrs[0] > lrs[-1]
+
+    def test_halfway_point_of_cosine(self):
+        # at (total+warmup)/2 the cosine term is 0.5
+        mid = (KW["total_steps"] + KW["warmup_steps"]) // 2
+        want = KW["peak_lr"] * (KW["min_ratio"]
+                                + (1 - KW["min_ratio"]) * 0.5)
+        assert _lr(mid) == pytest.approx(want, rel=1e-3)
+
+    def test_degenerate_zero_warmup(self):
+        assert _lr(0, warmup_steps=0) == pytest.approx(KW["peak_lr"])
+
+    def test_vectorized_over_steps(self):
+        steps = jnp.arange(0, 1001, 250, dtype=jnp.int32)
+        out = warmup_cosine(steps, **KW)
+        assert out.shape == steps.shape
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray([_lr(int(s)) for s in steps]),
+            rtol=1e-6)
+
+
+class TestConstant:
+    def test_constant_everywhere(self):
+        steps = jnp.asarray([0, 1, 10_000], jnp.int32)
+        out = constant(steps, peak_lr=1e-4, warmup_steps=7)  # extras ignored
+        np.testing.assert_allclose(np.asarray(out), 1e-4, rtol=1e-7)
+        assert out.dtype == jnp.float32
