@@ -8,15 +8,24 @@ emits machine-readable JSON:
   * ``BENCH_serve.json``  — the batched serving scheduler: throughput and
     submit-to-completion latency percentiles per policy (fifo / spf)
     against the sequential batch-1 baseline, on a decode smoke workload
-    (plus an AlexNet+decode mixed workload without ``--smoke``).
+    (plus an AlexNet+decode mixed workload without ``--smoke``);
+  * ``BENCH_tuning.json`` — the kernel autotuner: steady-state min-of-5
+    wallclock per workload on the Pallas backend for ``tuning="off"`` vs
+    ``"cached"`` crossed with fused vs unfused epilogues, so the perf
+    trajectory of `engine.tune` is machine-readable. ``--retune``
+    re-benchmarks the workloads' ops and refreshes
+    ``.tuning/<device_kind>.json`` (the committed cache CI runs on).
 
   python -m benchmarks.run [--smoke] [--out BENCH_engine.json]
                            [--serve-out BENCH_serve.json]
+                           [--tuning-out BENCH_tuning.json] [--retune]
 
 ``--smoke`` runs the fast CI path (regression gate): paper tables, the
-engine JSON, the serve smoke workload, and no heavy kernel/train
-microbenchmarks. The CI gate asserts the smoke workload's batched
-throughput stays >= 2x sequential at batch 8.
+engine JSON, the serve smoke workload, the tuning smoke workload, and no
+heavy kernel/train microbenchmarks. The CI gates assert the smoke
+workload's batched throughput stays >= 2x sequential at batch 8, that
+tuned+fused is >= 1.2x the untuned+unfused baseline, and that the fused
+epilogue is never slower than unfused beyond a 10% noise floor.
 """
 from __future__ import annotations
 
@@ -231,6 +240,153 @@ def _bench_serve_mixed(scfg) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Tuning bench: tuning="off"/"cached" x fused/unfused epilogues
+# ---------------------------------------------------------------------------
+
+# (n, m, act) dense stacks — dense-heavy on purpose: the FC mode is where
+# the per-op tile choice dominates (one GEMM blocking per layer shape).
+TUNING_WORKLOADS = {
+    "mlp": {"batch": 8, "layers": ((1024, 2048, "relu"),
+                                   (2048, 2048, "relu"),
+                                   (2048, 512, None))},
+    # AlexNet's FC stack (Table 4's FC side) — full mode only.
+    "alexnet_fc": {"batch": 8, "layers": ((9216, 4096, "relu"),
+                                          (4096, 4096, "relu"),
+                                          (4096, 1000, None))},
+}
+
+
+def _dense_stack_fn(layers, fused: bool):
+    """The workload forward: engine-routed dense stack, with bias+act
+    either fused into each op's epilogue or applied as separate ops (the
+    PR-3-era layer shape)."""
+    import jax.numpy as jnp
+
+    from repro import engine as E
+
+    def fn(params, x):
+        for (w, b), (_, _, act) in zip(params, layers):
+            if fused:
+                x = E.dense(x, w, bias=b, act=act, out_dtype=jnp.float32)
+            else:
+                x = E.dense(x, w, out_dtype=jnp.float32) + b
+                if act is not None:
+                    x = E.EPILOGUE_ACTS[act](x)
+        return x
+    return fn
+
+
+def _tuning_workload(name: str, spec: dict):
+    """(params, x, fused program, unfused program) for one dense stack."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import engine as E
+
+    batch, layers = spec["batch"], spec["layers"]
+    key = jax.random.PRNGKey(0)
+    params = []
+    for n, m, _ in layers:
+        key, kw = jax.random.split(key)
+        params.append((jax.random.normal(kw, (n, m), jnp.float32)
+                       * (2.0 / n) ** 0.5,
+                       jnp.zeros((m,), jnp.float32)))
+    params = tuple(params)
+    x = jax.random.normal(key, (batch, layers[0][0]), jnp.float32)
+    p_avals = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    x_aval = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    progs = {
+        fused: E.trace_program(_dense_stack_fn(layers, fused),
+                               p_avals, x_aval,
+                               name=f"{name}_{'fused' if fused else 'unfused'}")
+        for fused in (True, False)}
+    return params, x, progs[True], progs[False]
+
+
+def bench_tuning(smoke: bool, retune: bool = False) -> dict:
+    """Steady-state wallclock of the Pallas backend per workload across
+    {tuning off, cached} x {fused, unfused epilogues}, min-of-5.
+
+    The Pallas kernels run in interpret mode on CPU hosts, so absolute
+    times are not TPU times — but the *ratios* exercise exactly what the
+    autotuner controls: grid-step count and launch granularity per tile
+    config, and op count per fused epilogue.
+    """
+    import jax
+
+    from repro import engine as E
+
+    repeats = 5
+    names = ["mlp"] if smoke else list(TUNING_WORKLOADS)
+    base = dict(backend="pallas", interpret=True)
+    out = {"bench": "tuning",
+           "device_kind": E.tune.device_kind(),
+           "cache_path": str(E.tune.cache_path()),
+           "workloads": []}
+    for name in names:
+        params, x, prog_fused, prog_unfused = _tuning_workload(
+            name, TUNING_WORKLOADS[name])
+        if retune:
+            tuned = E.tune.tune_program(
+                prog_fused.ops, E.EngineConfig(**base, tuning="autotune"))
+            print(f"# retuned {name}: {tuned} op(s)", file=sys.stderr)
+        variants = {}
+        for mode in ("off", "cached"):
+            for fused in (False, True):
+                prog = prog_fused if fused else prog_unfused
+                net = E.compile(prog, E.EngineConfig(**base, tuning=mode))
+                t0 = time.perf_counter()
+                jax.block_until_ready(net.apply(params, x))
+                t_first = time.perf_counter() - t0
+                wall = float("inf")
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(net.apply(params, x))
+                    wall = min(wall, time.perf_counter() - t0)
+                variants[f"{mode}_{'fused' if fused else 'unfused'}"] = {
+                    "first_call_s": t_first,
+                    "steady_call_s": wall,
+                    "tiles": [list(t) if t else None for t in net.tiles()],
+                }
+        row = {
+            "name": name,
+            "batch": TUNING_WORKLOADS[name]["batch"],
+            "layers": [list(l[:2]) + [l[2]]
+                       for l in TUNING_WORKLOADS[name]["layers"]],
+            "variants": variants,
+            # tuned+fused against the PR-3-era shape (default tiles,
+            # separate bias/act ops) — the headline number
+            "speedup_tuned_fused_vs_baseline":
+                variants["off_unfused"]["steady_call_s"]
+                / variants["cached_fused"]["steady_call_s"],
+            "speedup_fused_vs_unfused":
+                variants["cached_unfused"]["steady_call_s"]
+                / variants["cached_fused"]["steady_call_s"],
+        }
+        out["workloads"].append(row)
+    cache = E.tune.load_cache()
+    out["cache_entries"] = len(cache.get("entries", {}))
+    return out
+
+
+def emit_tuning_json(path: str, smoke: bool, retune: bool,
+                     emit=print) -> None:
+    result = bench_tuning(smoke, retune)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    for row in result["workloads"]:
+        for variant, r in row["variants"].items():
+            emit(f"tuning/{row['name']}_{variant},"
+                 f"{r['steady_call_s']*1e6:.0f},")
+        emit(f"tuning/{row['name']}_speedup,0,"
+             f"tuned_fused_vs_baseline="
+             f"{row['speedup_tuned_fused_vs_baseline']:.2f}x;"
+             f"fused_vs_unfused={row['speedup_fused_vs_unfused']:.2f}x")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def emit_serve_json(path: str, smoke: bool, emit=print) -> None:
     result = bench_serve(smoke)
     with open(path, "w") as f:
@@ -255,6 +411,11 @@ def main(argv=None) -> None:
                     help="machine-readable engine bench output path")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="machine-readable serve-scheduler bench output path")
+    ap.add_argument("--tuning-out", default="BENCH_tuning.json",
+                    help="machine-readable kernel-tuning bench output path")
+    ap.add_argument("--retune", action="store_true",
+                    help="autotune the tuning-bench workloads first and "
+                         "refresh .tuning/<device_kind>.json")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
@@ -277,6 +438,7 @@ def main(argv=None) -> None:
     nets = ["alexnet"] if args.smoke else ["alexnet", "vgg16", "resnet50"]
     emit_engine_json(args.out, nets)
     emit_serve_json(args.serve_out, args.smoke)
+    emit_tuning_json(args.tuning_out, args.smoke, args.retune)
 
     if not args.smoke:
         from benchmarks import kernel_bench

@@ -122,11 +122,16 @@ def fc_mode(p: int = MMIE_NUM_PES) -> Mode:
 def mxu_tiling_for_mode(mode: Mode, c_in: int, c_out: int) -> Tuple[int, int, int]:
     """TPU analogue of (N_eff, p_eff): (row_tile, k_tile, cout_tile) for the
     GFID Pallas kernel, aligned to the MXU (multiples of (8,128))."""
-    row_tile = max(8, min(256, _round_up(mode.n_eff, 8)))
-    k_tile = min(_round_up(c_in, 128), 512)
-    cout_tile = min(_round_up(c_out, 128), 256)
+    row_tile = max(8, min(256, round_up(mode.n_eff, 8)))
+    k_tile = min(round_up(c_in, 128), 512)
+    cout_tile = min(round_up(c_out, 128), 256)
     return row_tile, k_tile, cout_tile
 
 
-def _round_up(x: int, m: int) -> int:
+def round_up(x: int, m: int) -> int:
+    """Ceil `x` to a multiple of `m` — the repo-wide alignment helper
+    (MXU tile quantization, kernel block clamps, tune candidate grids)."""
     return (x + m - 1) // m * m
+
+
+_round_up = round_up        # backward-compat private alias

@@ -25,11 +25,17 @@ Per-op pieces (all pure, jit-friendly, singleton-free):
   * backend registry (dispatch.py) — "pallas" / "xla" / "ref", extensible
     via `register_backend`;
   * `Ledger` + `tracking()` (ledger.py) — explicit analytics, replacing the
-    old process-global `default_engine()` singleton.
+    old process-global `default_engine()` singleton;
+  * kernel autotuner (tune.py) — per-op Pallas tile configs, benchmarked
+    once and persisted to `.tuning/<device_kind>.json`, selected by
+    `EngineConfig.tuning` and pinned at `engine.compile` time. Every
+    dense/conv op also takes `bias=` / `act=` — a fused epilogue applied
+    in the kernel's fp32 accumulator on the Pallas backend.
 
 Legacy `repro.core.MultiModeEngine` remains as a deprecation shim over this
 package for one release.
 """
+from repro.engine import tune  # noqa: F401
 from repro.engine.api import (  # noqa: F401
     capturing, conv1d_depthwise, conv2d, dense, einsum, matmul, proj,
     replaying)
@@ -38,7 +44,8 @@ from repro.engine.config import (  # noqa: F401
     set_default_backend, set_default_config, set_interpret, using_backend,
     using_config)
 from repro.engine.dispatch import (  # noqa: F401
-    EngineBackend, backend_names, get_backend, register_backend)
+    EPILOGUE_ACTS, EngineBackend, apply_epilogue, backend_names, get_backend,
+    register_backend)
 from repro.engine.ledger import (  # noqa: F401
     Ledger, OpRecord, is_tracking, record, tracking)
 from repro.engine.plan import (  # noqa: F401

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine import dispatch, ledger as ledger_mod, plan as planlib
+from repro.engine import tune as tunelib
 from repro.engine.config import (  # noqa: F401 (re-exported compat surface)
     EngineConfig, current_config, default_backend, set_default_backend,
     set_default_config, set_interpret, using_backend, using_config)
@@ -156,6 +157,35 @@ def _interp(interpret: Optional[bool]) -> bool:
     return current_config().interpret if interpret is None else interpret
 
 
+def _maybe_tile(op: planlib.OpSpec,
+                plan: planlib.EnginePlan) -> planlib.EnginePlan:
+    """Eager-path tile resolution: pin a *cached* tuned tile under
+    `cfg.tuning != "off"`. Replayed plans (a `CompiledNet` executing) are
+    returned untouched — whatever `engine.compile` pinned (including a
+    deliberate None on a cache miss) IS the execution contract; re-resolving
+    here would let a cache written after compile change a compiled net's
+    K-blocking (and so its accumulation order) at first-apply time.
+    Autotuning itself only ever happens at compile time, never per call."""
+    if _PROG.replay:
+        return plan
+    cfg = current_config()
+    if cfg.tuning == "off" or plan.backend != "pallas":
+        return plan
+    return tunelib.attach(op, plan, cfg)
+
+
+def _check_epilogue(bias: Optional[jax.Array], act: Optional[str],
+                    n_out: int, what: str) -> None:
+    if act is not None and act not in dispatch.EPILOGUE_ACTS:
+        raise ValueError(
+            f"unknown epilogue activation {act!r} for {what}; expected one "
+            f"of {sorted(dispatch.EPILOGUE_ACTS)}")
+    if bias is not None and tuple(bias.shape) != (n_out,):
+        raise ValueError(
+            f"epilogue bias for {what} must have shape ({n_out},) — one "
+            f"entry per output feature; got {tuple(bias.shape)}")
+
+
 def _row_pad_amount(structure: planlib.EinsumStructure,
                     x_shape: Tuple[int, ...]) -> int:
     """Rows to zero-pad onto x's leading axis under `cfg.row_align`.
@@ -181,20 +211,27 @@ def _row_pad_amount(structure: planlib.EinsumStructure,
 # ---------------------------------------------------------------------------
 
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
-           groups: int = 1, backend: Optional[str] = None,
+           groups: int = 1, bias: Optional[jax.Array] = None,
+           act: Optional[str] = None, backend: Optional[str] = None,
            accum_dtype=_UNSET,
            interpret: Optional[bool] = None) -> jax.Array:
     """Conv mode. x: (B,H,W,C_in) NHWC; w: (H_f,W_f,C_in/g,C_out) HWIO.
-    Returns (B,H_out,W_out,C_out) in x.dtype."""
+    Returns (B,H_out,W_out,C_out) in x.dtype.
+
+    `bias` ((C_out,)) and `act` ("relu" | "gelu") form the op's fused
+    epilogue: conv+bias+activation is one kernel launch on the Pallas
+    backend (applied in the fp32 accumulator before writeback) and ordinary
+    fused post-ops elsewhere."""
     op = planlib.OpSpec("conv2d", tuple(map(int, x.shape)),
                         tuple(map(int, w.shape)), stride=int(stride),
                         pad=int(pad), groups=int(groups))
-    plan = _plan_for(op, backend)
+    _check_epilogue(bias, act, op.w_shape[3], "conv2d")
+    plan = _maybe_tile(op, _plan_for(op, backend))
     ledger_mod.record(plan)
     out = dispatch.get_backend(plan.backend).conv2d(
         x, w, plan, stride=stride, pad=pad, groups=groups,
         accum_dtype=_resolve_accum(accum_dtype, "conv2d"),
-        interpret=_interp(interpret))
+        interpret=_interp(interpret), bias=bias, act=act)
     return out.astype(x.dtype)
 
 
@@ -212,14 +249,34 @@ def conv1d_depthwise(x: jax.Array, w: jax.Array, *, causal: bool = True,
 
 
 def einsum(spec: str, x: jax.Array, w: jax.Array, *,
+           bias: Optional[jax.Array] = None, act: Optional[str] = None,
            backend: Optional[str] = None, accum_dtype=_UNSET,
            out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
-    """FC mode for any two-operand dense contraction (weights second)."""
+    """FC mode for any two-operand dense contraction (weights second).
+
+    `bias` ((n_out,), one entry per trailing output feature) and `act`
+    ("relu" | "gelu") form the fused epilogue (in-kernel on the Pallas
+    GEMM's canonical path, post-ops elsewhere); the trailing output label
+    must be a weight-side (w-free) dim for a bias to be well-defined."""
     op = planlib.OpSpec("dense", tuple(map(int, x.shape)),
                         tuple(map(int, w.shape)), spec=spec)
-    plan = _plan_for(op, backend)
-    ledger_mod.record(plan)
     structure = planlib.parse_einsum(spec, x.ndim, w.ndim)
+    if bias is not None:
+        # a per-feature bias needs a weight-side trailing output dim; a
+        # bare activation is elementwise and valid on any output layout
+        if not structure.out_labels \
+                or structure.out_labels[-1] not in structure.w_free:
+            raise ValueError(
+                f"epilogue bias on einsum {spec!r}: the trailing output "
+                "label must be a weight-only (w-free) dim to carry a "
+                "per-feature bias")
+        lab = structure.out_labels[-1]
+        n_out = op.w_shape[structure.w_labels.index(lab)]
+        _check_epilogue(bias, act, n_out, f"einsum {spec!r}")
+    elif act is not None:
+        _check_epilogue(None, act, 0, f"einsum {spec!r}")
+    plan = _maybe_tile(op, _plan_for(op, backend))
+    ledger_mod.record(plan)
     pad = _row_pad_amount(structure, op.x_shape)
     if pad:
         x = jnp.concatenate(
@@ -227,22 +284,24 @@ def einsum(spec: str, x: jax.Array, w: jax.Array, *,
     out = dispatch.get_backend(plan.backend).einsum(
         spec, x, w, plan, structure,
         accum_dtype=_resolve_accum(accum_dtype, "einsum"),
-        interpret=_interp(interpret))
+        interpret=_interp(interpret), bias=bias, act=act)
     if pad:
         ax = structure.out_labels.index(structure.x_labels[0])
         out = jax.lax.slice_in_dim(out, 0, op.x_shape[0], axis=ax)
     return out if out_dtype is None else out.astype(out_dtype)
 
 
-def dense(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+def dense(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
+          act: Optional[str] = None, backend: Optional[str] = None,
           accum_dtype=_UNSET, out_dtype=None,
           interpret: Optional[bool] = None) -> jax.Array:
-    """FC mode (W_f = 1): x (..., n) @ w (n, m) -> (..., m)."""
+    """FC mode (W_f = 1): x (..., n) @ w (n, m) -> (..., m), with an
+    optional fused bias ((m,)) / activation epilogue."""
     if isinstance(accum_dtype, _Unset):
         accum_dtype = _resolve_accum(accum_dtype, "dense")
-    return einsum(planlib.dense_spec(x.ndim), x, w, backend=backend,
-                  accum_dtype=accum_dtype, out_dtype=out_dtype,
-                  interpret=interpret)
+    return einsum(planlib.dense_spec(x.ndim), x, w, bias=bias, act=act,
+                  backend=backend, accum_dtype=accum_dtype,
+                  out_dtype=out_dtype, interpret=interpret)
 
 
 def proj(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
@@ -255,8 +314,11 @@ def proj(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
 
 
 # `matmul` mirrors the legacy `MultiModeEngine.matmul` contract exactly:
-# fp32 accumulation, result cast back to the input dtype.
-def matmul(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+# fp32 accumulation, result cast back to the input dtype (the fused
+# epilogue, when given, runs before the cast — i.e. in fp32).
+def matmul(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
+           act: Optional[str] = None, backend: Optional[str] = None,
            interpret: Optional[bool] = None) -> jax.Array:
-    return dense(x, w, backend=backend, accum_dtype=jnp.float32,
-                 out_dtype=x.dtype, interpret=interpret)
+    return dense(x, w, bias=bias, act=act, backend=backend,
+                 accum_dtype=jnp.float32, out_dtype=x.dtype,
+                 interpret=interpret)

@@ -28,6 +28,7 @@ import threading
 from typing import Iterator, List, Optional
 
 _POLICIES = ("fixed", "auto")
+_TUNING_MODES = ("off", "cached", "autotune")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,16 @@ class EngineConfig:
                 Batched execution under `row_align` is bitwise identical,
                 row for row, to batch-1 execution (what the
                 `serve.scheduler` parity contract relies on).
+    tuning    — kernel tile selection for the Pallas backend (engine/tune.py):
+                "off" keeps the kernels' built-in default tiling; "cached"
+                uses per-op winners from the committed tile cache
+                (`.tuning/<device_kind>.json`), silently falling back to the
+                defaults on a miss; "autotune" benchmarks missing ops at
+                `engine.compile` time and persists the winners to the cache.
+                Tile keys are batch-invariant (dense keys drop the row dim,
+                conv keys the batch dim), so batched and batch-1 execution
+                always share one tile config — the accumulation-order
+                guarantee the scheduler's bitwise parity contract needs.
     """
 
     backend: str = "xla"
@@ -62,12 +73,17 @@ class EngineConfig:
     accum: Optional[str] = None
     policy: str = "fixed"
     row_align: Optional[int] = None
+    tuning: str = "off"
 
     def __post_init__(self) -> None:
         if self.policy not in _POLICIES:
             raise ValueError(
                 f"unknown backend-selection policy {self.policy!r}; "
                 f"expected one of {_POLICIES}")
+        if self.tuning not in _TUNING_MODES:
+            raise ValueError(
+                f"unknown tuning mode {self.tuning!r}; "
+                f"expected one of {_TUNING_MODES}")
         if self.row_align is not None and (
                 not isinstance(self.row_align, int) or self.row_align < 1):
             raise ValueError(

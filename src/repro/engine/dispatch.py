@@ -24,6 +24,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gfid
+from repro.engine.plan import canonical_gemm
+# the epilogue registry lives in a Pallas-free leaf module: importing the
+# engine must not pull jax.experimental.pallas in for xla/ref-only users
+from repro.kernels.epilogue import ACTS as EPILOGUE_ACTS
+
+
+def apply_epilogue(out: jax.Array, bias: Optional[jax.Array],
+                   act: Optional[str]) -> jax.Array:
+    """The unfused reference epilogue: bias broadcast-added on the trailing
+    axis, then the activation — what the XLA/ref backends (and any fallback
+    path) run after the op, numerically identical to the Pallas kernels'
+    in-accumulator epilogue for fp32."""
+    if bias is not None:
+        out = out + bias
+    if act is not None:
+        out = EPILOGUE_ACTS[act](out)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,8 +48,14 @@ class EngineBackend:
     """One execution strategy for the engine's three op kinds.
 
     Callables receive the already-computed `EnginePlan` so a backend can read
-    the mode / MXU tiling instead of re-deriving it. `einsum` receives the
-    literal spec plus its parsed `EinsumStructure`.
+    the mode / MXU tiling — and, when `engine.tune` pinned one, the tuned
+    `plan.tile_config` — instead of re-deriving them. `einsum` receives the
+    literal spec plus its parsed `EinsumStructure`. `conv2d` and `einsum`
+    accept the fused-epilogue kwargs (`bias=`, `act=`): the Pallas backend
+    folds them into the kernel's fp32 accumulator, the XLA/ref backends
+    apply them as ordinary post-ops via `apply_epilogue` (XLA fuses them
+    under jit anyway); custom backends that ignore them via `**kw` silently
+    drop the epilogue, so handle both kwargs when registering one.
     """
 
     name: str
@@ -67,27 +90,34 @@ def backend_names() -> Tuple[str, ...]:
 # "xla" — pure-JAX GFID shifted-GEMM lowering
 # ---------------------------------------------------------------------------
 
-def _xla_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret):
-    return gfid.conv2d_gfid(x, w, stride, pad, groups,
-                            accum_dtype=accum_dtype or jnp.float32)
+def _xla_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret,
+                bias=None, act=None):
+    out = gfid.conv2d_gfid(x, w, stride, pad, groups,
+                           accum_dtype=accum_dtype or jnp.float32)
+    return apply_epilogue(out, bias, act)
 
 
 def _xla_conv1d_dw(x, w, plan, *, causal, interpret):
     return gfid.conv1d_depthwise_gfid(x, w, causal=causal)
 
 
-def _xla_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret):
+def _xla_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret,
+                bias=None, act=None):
     if accum_dtype is not None:
-        return jnp.einsum(spec, x, w, preferred_element_type=accum_dtype)
-    return jnp.einsum(spec, x, w)
+        out = jnp.einsum(spec, x, w, preferred_element_type=accum_dtype)
+    else:
+        out = jnp.einsum(spec, x, w)
+    return apply_epilogue(out, bias, act)
 
 
 # ---------------------------------------------------------------------------
 # "ref" — XLA-native direct ops (the paper's comparison baseline)
 # ---------------------------------------------------------------------------
 
-def _ref_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret):
-    return gfid.conv2d_reference(x, w, stride, pad, groups)
+def _ref_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret,
+                bias=None, act=None):
+    out = gfid.conv2d_reference(x, w, stride, pad, groups)
+    return apply_epilogue(out, bias, act)
 
 
 def _ref_conv1d_dw(x, w, plan, *, causal, interpret):
@@ -98,9 +128,11 @@ def _ref_conv1d_dw(x, w, plan, *, causal, interpret):
 # "pallas" — repro.kernels TPU kernels
 # ---------------------------------------------------------------------------
 
-def _pallas_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret):
+def _pallas_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret,
+                   bias=None, act=None):
     from repro.kernels import ops
     return ops.gfid_conv2d(x, w, stride=stride, pad=pad, groups=groups,
+                           tile=plan.tile_config, bias=bias, act=act,
                            interpret=interpret)
 
 
@@ -109,22 +141,23 @@ def _pallas_conv1d_dw(x, w, plan, *, causal, interpret):
     return ops.gfid_conv1d_depthwise(x, w, causal=causal, interpret=interpret)
 
 
-def _pallas_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret):
+def _pallas_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret,
+                   bias=None, act=None):
     """Canonicalize to (M, K) @ (K, N) for the blocked-GEMM kernel when the
     contraction allows it; batched-weight specs (stacked experts) fall back
-    to the XLA lowering — the MoE grouped GEMM kernel is future work."""
+    to the XLA lowering — the MoE grouped GEMM kernel is future work. The
+    fused epilogue rides the kernel on the canonical path and falls back to
+    `apply_epilogue` with it."""
     st = structure
-    canonical = (
-        w.ndim == 2 and len(st.contract) == 1 and not st.batch
-        and st.out_labels == st.x_free + st.w_free)
-    if not canonical:
-        return _xla_einsum(spec, x, w, plan, st,
-                           accum_dtype=accum_dtype, interpret=interpret)
+    if not canonical_gemm(st, w.ndim):
+        return _xla_einsum(spec, x, w, plan, st, accum_dtype=accum_dtype,
+                           interpret=interpret, bias=bias, act=act)
     from repro.kernels import ops
     c = st.contract[0]
     xm = jnp.moveaxis(x, st.x_labels.index(c), -1)
     w2 = w if st.w_labels[0] == c else w.T
-    return ops.gfid_matmul(xm, w2, interpret=interpret)
+    return ops.gfid_matmul(xm, w2, tile=plan.tile_config, bias=bias, act=act,
+                           interpret=interpret)
 
 
 register_backend(EngineBackend("xla", _xla_conv2d, _xla_conv1d_dw,

@@ -113,6 +113,12 @@ class EnginePlan:
     ma_words: int                   # MMIE memory accesses, 16-bit words
     macs: int                       # useful multiply-accumulates
     note: str = ""                  # plan caveats (fallbacks, decimation, ...)
+    # Tuned kernel tile pinned by engine.compile / the eager cached lookup
+    # (engine/tune.py): (bm, bk, bn) for dense, (cib, cob) for conv2d. None
+    # keeps the kernel's built-in default. The lru-cached planners below
+    # never set it — a tuned plan is always a dataclasses.replace of a pure
+    # analytic plan, so the plan caches stay tuning-agnostic.
+    tile_config: Optional[Tuple[int, ...]] = None
 
     @property
     def performance_efficiency(self) -> float:
@@ -189,6 +195,19 @@ class EinsumStructure:
     contract: Tuple[str, ...]       # in x and w, not out
     x_free: Tuple[str, ...]         # in x and out only
     w_free: Tuple[str, ...]         # in w and out only
+
+
+def canonical_gemm(structure: EinsumStructure, w_ndim: int) -> bool:
+    """True when a dense contraction lowers to ONE (M, K) @ (K, N) blocked
+    GEMM: single contract label, plain 2-D weights, no batched dims, output
+    laid out x-free rows then w-free cols. The single source of truth for
+    both the Pallas dispatch path (dispatch._pallas_einsum runs the kernel
+    exactly when this holds, else falls back to the XLA lowering) and the
+    autotuner's key space (engine/tune.py only tunes ops the kernel will
+    actually execute)."""
+    return (w_ndim == 2 and len(structure.contract) == 1
+            and not structure.batch
+            and structure.out_labels == structure.x_free + structure.w_free)
 
 
 @functools.lru_cache(maxsize=1024)

@@ -33,6 +33,7 @@ import jax
 
 from repro.core import modes
 from repro.engine import api
+from repro.engine import tune as tunelib
 from repro.engine.config import EngineConfig, current_config, using_config
 from repro.engine.plan import (EnginePlan, OpSpec, auto_backend,
                                parse_einsum, plan_op)
@@ -366,6 +367,12 @@ class CompiledNet:
         pairs = self.exec_pairs if self.exec_pairs is not None else ()
         return tuple(plan.backend for _, plan in pairs)
 
+    def tiles(self) -> Tuple[Optional[Tuple[int, ...]], ...]:
+        """Per-op tuned tile configs of the execution plan, in call order
+        (None = kernel default / not a Pallas-tiled op)."""
+        pairs = self.exec_pairs if self.exec_pairs is not None else ()
+        return tuple(plan.tile_config for _, plan in pairs)
+
 
 def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
             cfg: Optional[EngineConfig] = None) -> CompiledNet:
@@ -377,6 +384,11 @@ def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
     captured fresh from `program.fn` at the program's avals, so `.apply`
     always matches the real op sequence — including layers the paper's
     counting omits (projection shortcuts).
+
+    Tile resolution happens here, per `cfg.tuning` (see engine/tune.py):
+    every Pallas-bound op's tuned tile config is resolved at compile time
+    and pinned into its exec pair — under `"autotune"` cache misses are
+    benchmarked (and persisted) now, so `.apply` never pays tuning cost.
     """
     cfg = current_config() if cfg is None else cfg
     net_plan = plan_network(program, cfg)
@@ -384,5 +396,7 @@ def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
     if program.fn is not None:
         exec_ops = _capture_ops(program.fn, program.in_avals)
         exec_pairs = tuple(
-            (op, plan_op(op, _select_backend(op, cfg))) for op in exec_ops)
+            (op, tunelib.attach(op, plan_op(op, _select_backend(op, cfg)),
+                                cfg, allow_autotune=True))
+            for op in exec_ops)
     return CompiledNet(program, cfg, net_plan, exec_pairs)

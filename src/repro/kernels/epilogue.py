@@ -1,0 +1,18 @@
+"""Fused-epilogue activation registry.
+
+A Pallas-free leaf module (imports nothing but jax.nn), so the engine's
+dispatch layer can validate/apply epilogue activations without pulling
+`jax.experimental.pallas` into every `repro.engine` import — the kernel
+modules import the same dict, keeping in-kernel and post-op numerics
+identical. "gelu" matches `models.layers.ACTIVATIONS` (tanh approximation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+}

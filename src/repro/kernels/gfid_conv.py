@@ -11,25 +11,29 @@ Grid: (B, H_out, n_cout, H_f, n_cin) — the two innermost dims revisit the
 same output block consecutively, accumulating in place, exactly like the
 paper's PEs accumulate C_in x H_f partial products per output pixel
 (§4: "this procedure is repeated H_f x C_in times").
+
+Channel tiling `(c_in_block, c_out_block)` is an explicit knob (the
+per-layer resource adaptation of `engine.tune`): ragged channel counts fall
+back to whole-channel blocks. Optional fused epilogue: `bias` (C_out,)
+and/or `act` ("relu" | "gelu") applied to the fp32 accumulator on the last
+(H_f, C_in-tile) grid step, before the single writeback.
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.epilogue import ACTS
 
-def _kernel(x_ref, w_ref, o_ref, *, w_f: int, stride: int, w_out: int):
-    j = pl.program_id(3)
-    k = pl.program_id(4)
+DEFAULT_CONV_TILE = (512, 256)      # (c_in_block, c_out_block)
 
-    @pl.when((j == 0) & (k == 0))
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
 
+def _accumulate(x_ref, w_ref, o_ref, *, w_f: int, stride: int, w_out: int):
     xv = x_ref[0, 0]                          # (W_in_pad, C_in_blk) VMEM
     acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.float32)
     for i in range(w_f):                      # the W_f weight-register loop
@@ -41,11 +45,50 @@ def _kernel(x_ref, w_ref, o_ref, *, w_f: int, stride: int, w_out: int):
     o_ref[0, 0] += acc
 
 
+def _kernel(x_ref, w_ref, o_ref, *, w_f: int, stride: int, w_out: int):
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _accumulate(x_ref, w_ref, o_ref, w_f=w_f, stride=stride, w_out=w_out)
+
+
+def _kernel_epilogue(x_ref, w_ref, b_ref, o_ref, *, w_f: int, stride: int,
+                     w_out: int, last_j: int, last_k: int,
+                     act: Optional[str]):
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _accumulate(x_ref, w_ref, o_ref, w_f=w_f, stride=stride, w_out=w_out)
+
+    @pl.when((j == last_j) & (k == last_k))
+    def _epilogue():
+        y = o_ref[0, 0] + b_ref[...]          # (W_out, cob) + (1, cob)
+        o_ref[0, 0] = ACTS[act](y) if act is not None else y
+
+
 def gfid_conv2d_nhwc(x: jax.Array, w: jax.Array, *, stride: int = 1,
-                     c_in_block: int = 512, c_out_block: int = 256,
+                     c_in_block: int = DEFAULT_CONV_TILE[0],
+                     c_out_block: int = DEFAULT_CONV_TILE[1],
+                     bias: Optional[jax.Array] = None,
+                     act: Optional[str] = None,
                      interpret: bool = False) -> jax.Array:
     """Valid conv (pad outside). x: (B, H_in, W_in, C_in) already padded;
-    w: (H_f, W_f, C_in, C_out). Returns (B, H_out, W_out, C_out) fp32."""
+    w: (H_f, W_f, C_in, C_out). Returns (B, H_out, W_out, C_out) fp32.
+
+    `bias` (C_out,) and `act` ("relu" | "gelu") run as a fused epilogue in
+    the fp32 accumulator before writeback.
+    """
+    if act is not None and act not in ACTS:
+        raise ValueError(f"unknown epilogue activation {act!r}; "
+                         f"expected one of {sorted(ACTS)}")
     b, h_in, w_in, c_in = x.shape
     h_f, w_f, _, c_out = w.shape
     h_out = (h_in - h_f) // stride + 1
@@ -59,17 +102,24 @@ def gfid_conv2d_nhwc(x: jax.Array, w: jax.Array, *, stride: int = 1,
     n_ci, n_co = c_in // cib, c_out // cob
 
     grid = (b, h_out, n_co, h_f, n_ci)
+    x_spec = pl.BlockSpec((1, 1, w_in, cib),
+                          lambda bi, z, co, j, k: (bi, z * stride + j, 0, k))
+    w_spec = pl.BlockSpec((1, w_f, cib, cob),
+                          lambda bi, z, co, j, k: (j, 0, k, co))
+    o_spec = pl.BlockSpec((1, 1, w_out, cob),
+                          lambda bi, z, co, j, k: (bi, z, 0, co))
+    out_shape = jax.ShapeDtypeStruct((b, h_out, w_out, c_out), jnp.float32)
+    if bias is None and act is None:
+        return pl.pallas_call(
+            functools.partial(_kernel, w_f=w_f, stride=stride, w_out=w_out),
+            grid=grid, in_specs=[x_spec, w_spec], out_specs=o_spec,
+            out_shape=out_shape, interpret=interpret)(x, w)
+    bv = (jnp.zeros((c_out,), jnp.float32) if bias is None
+          else bias.astype(jnp.float32)).reshape(1, c_out)
+    b_spec = pl.BlockSpec((1, cob), lambda bi, z, co, j, k: (0, co))
     return pl.pallas_call(
-        functools.partial(_kernel, w_f=w_f, stride=stride, w_out=w_out),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, w_in, cib),
-                         lambda bi, z, co, j, k: (bi, z * stride + j, 0, k)),
-            pl.BlockSpec((1, w_f, cib, cob),
-                         lambda bi, z, co, j, k: (j, 0, k, co)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, w_out, cob),
-                               lambda bi, z, co, j, k: (bi, z, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, c_out), jnp.float32),
-        interpret=interpret,
-    )(x, w)
+        functools.partial(_kernel_epilogue, w_f=w_f, stride=stride,
+                          w_out=w_out, last_j=h_f - 1, last_k=n_ci - 1,
+                          act=act),
+        grid=grid, in_specs=[x_spec, w_spec, b_spec], out_specs=o_spec,
+        out_shape=out_shape, interpret=interpret)(x, w, bv)

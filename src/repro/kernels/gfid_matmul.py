@@ -1,16 +1,44 @@
 """FC mode of the multi-mode engine: blocked GEMM Pallas kernel.
 
 The W_f = 1 degenerate mode (paper §4.1.6, UF = 100%): same engine, no
-shifted accumulation, MXU-aligned (128-multiple) tiles, fp32 accumulator in
-VMEM.
+shifted accumulation, MXU-aligned tiles, fp32 accumulator in VMEM.
+
+Tiling contract: callers pass any (bm, bk, bn) — e.g. the per-op winner of
+`engine.tune` — and the kernel clamps each block to the *MXU-aligned*
+envelope of the actual problem (rows to the 8-row sublane, K/N to the
+128-lane tile), pads the operands once to block multiples, launches a
+single `pallas_call`, and slices the result back. The old implementation
+clamped with a raw `min(block, dim)` — a misaligned block for any small
+dim (e.g. M=10 logits rows) — and re-entered itself recursively to pad.
+
+Fused epilogue: `bias` (shape (N,)) and/or `act` ("relu" | "gelu") are
+applied to the fp32 accumulator in VMEM on the last K step, before the
+single writeback — one kernel launch for matmul+bias+activation instead of
+three ops.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.modes import round_up as _round_up
+from repro.kernels.epilogue import ACTS
+
+DEFAULT_TILE = (256, 512, 256)      # (bm, bk, bn) when no tuned config wins
+
+
+def clamp_tile(m: int, k: int, n: int, bm: int, bk: int, bn: int,
+               ) -> Tuple[int, int, int]:
+    """Clamp a requested (bm, bk, bn) to the MXU-aligned envelope of an
+    (M, K) @ (K, N) problem: rows to 8 (fp32 sublane), K/N to 128 (lane)."""
+    bm = max(8, min(_round_up(bm, 8), _round_up(m, 8)))
+    bk = max(128, min(_round_up(bk, 128), _round_up(k, 128)))
+    bn = max(128, min(_round_up(bn, 128), _round_up(n, 128)))
+    return bm, bk, bn
 
 
 def _kernel(x_ref, w_ref, o_ref):
@@ -24,31 +52,65 @@ def _kernel(x_ref, w_ref, o_ref):
                           preferred_element_type=jnp.float32)
 
 
-def gfid_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bk: int = 512,
-                bn: int = 256, interpret: bool = False) -> jax.Array:
-    """x: (M, K) @ w: (K, N) -> (M, N) fp32."""
+def _kernel_epilogue(x_ref, w_ref, b_ref, o_ref, *, nk: int,
+                     act: Optional[str]):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        o_ref[...] = ACTS[act](y) if act is not None else y
+
+
+def gfid_matmul(x: jax.Array, w: jax.Array, *, bm: int = DEFAULT_TILE[0],
+                bk: int = DEFAULT_TILE[1], bn: int = DEFAULT_TILE[2],
+                bias: Optional[jax.Array] = None, act: Optional[str] = None,
+                interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N) fp32, with optional fused epilogue.
+
+    `bias`: (N,) added to the fp32 accumulator before writeback.
+    `act`:  "relu" | "gelu", applied after the bias add (fused epilogue).
+    """
+    if act is not None and act not in ACTS:
+        raise ValueError(f"unknown epilogue activation {act!r}; "
+                         f"expected one of {sorted(ACTS)}")
     m, k = x.shape
     _, n = w.shape
-    bm = min(bm, m)
-    bk = min(bk, k)
-    bn = min(bn, n)
-    if m % bm or k % bk or n % bn:
-        # pad to block multiples (MXU tile quantization — the engine's
-        # occupancy loss, reported by core.analytics.mxu_occupancy)
-        mp = -(-m // bm) * bm
-        kp = -(-k // bk) * bk
-        np_ = -(-n // bn) * bn
+    bm, bk, bn = clamp_tile(m, k, n, bm, bk, bn)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    if (mp, kp) != (m, k):
+        # single-pass pad to block multiples (MXU tile quantization — the
+        # engine's occupancy loss, reported by core.analytics.mxu_occupancy)
         x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
         w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
-        out = gfid_matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
-        return out[:m, :n]
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
-    )(x, w)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    nk = grid[2]
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    out_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
+    if bias is None and act is None:
+        out = pl.pallas_call(
+            _kernel,
+            grid=grid, in_specs=[x_spec, w_spec], out_specs=o_spec,
+            out_shape=out_shape, interpret=interpret)(x, w)
+    else:
+        b = (jnp.zeros((n,), jnp.float32) if bias is None
+             else bias.astype(jnp.float32))
+        b = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+        b_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+        out = pl.pallas_call(
+            functools.partial(_kernel_epilogue, nk=nk, act=act),
+            grid=grid, in_specs=[x_spec, w_spec, b_spec], out_specs=o_spec,
+            out_shape=out_shape, interpret=interpret)(x, w, b)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out

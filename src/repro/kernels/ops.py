@@ -9,7 +9,7 @@ the pure-jnp references in ref.py / core.gfid.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +21,14 @@ from repro.kernels import gfid_matmul as _matmul
 
 
 def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
-                groups: int = 1, interpret: bool = True) -> jax.Array:
+                groups: int = 1, tile: Optional[Tuple[int, int]] = None,
+                bias: Optional[jax.Array] = None, act: Optional[str] = None,
+                interpret: bool = True) -> jax.Array:
     """NHWC x HWIO conv through the multi-mode engine's conv mode.
+
+    `tile` is the (c_in_block, c_out_block) channel tiling (None keeps the
+    kernel default; `engine.tune` passes per-layer winners). `bias` (C_out,)
+    and `act` ("relu" | "gelu") run as a fused in-kernel epilogue.
 
     Grouped convolution (AlexNet's historical 2-group layers) runs as ONE
     batched kernel call: the group axis is stacked in front of x and w and
@@ -30,10 +36,13 @@ def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
     the old eager Python loop that emitted `groups` separate kernel launches
     plus a concatenate.
     """
+    cib, cob = tile if tile is not None else _conv.DEFAULT_CONV_TILE
     if pad:
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
     if groups == 1:
-        out = _conv.gfid_conv2d_nhwc(x, w, stride=stride, interpret=interpret)
+        out = _conv.gfid_conv2d_nhwc(x, w, stride=stride, c_in_block=cib,
+                                     c_out_block=cob, bias=bias, act=act,
+                                     interpret=interpret)
         return out.astype(x.dtype)
     b, h_in, w_in, c_in = x.shape
     h_f, w_f, cg, c_out = w.shape
@@ -41,20 +50,36 @@ def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
     # (B,H,W,G*cg) -> (G,B,H,W,cg); (Hf,Wf,cg,G*og) -> (G,Hf,Wf,cg,og).
     xg = jnp.moveaxis(x.reshape(b, h_in, w_in, groups, cg), 3, 0)
     wg = jnp.moveaxis(w.reshape(h_f, w_f, cg, groups, og), 3, 0)
-    outs = jax.vmap(
-        lambda xv, wv: _conv.gfid_conv2d_nhwc(xv, wv, stride=stride,
-                                              interpret=interpret))(xg, wg)
+    if bias is None and act is None:
+        outs = jax.vmap(
+            lambda xv, wv: _conv.gfid_conv2d_nhwc(
+                xv, wv, stride=stride, c_in_block=cib, c_out_block=cob,
+                interpret=interpret))(xg, wg)
+    else:
+        bg = (jnp.zeros((c_out,), jnp.float32) if bias is None
+              else bias.astype(jnp.float32)).reshape(groups, og)
+        outs = jax.vmap(
+            lambda xv, wv, bv: _conv.gfid_conv2d_nhwc(
+                xv, wv, stride=stride, c_in_block=cib, c_out_block=cob,
+                bias=bv, act=act, interpret=interpret))(xg, wg, bg)
     # (G,B,Ho,Wo,og) -> (B,Ho,Wo,G*og) with groups major in C_out.
     return jnp.moveaxis(outs, 0, 3).reshape(
         b, outs.shape[2], outs.shape[3], c_out).astype(x.dtype)
 
 
 def gfid_matmul(x: jax.Array, w: jax.Array, *,
+                tile: Optional[Tuple[int, int, int]] = None,
+                bias: Optional[jax.Array] = None, act: Optional[str] = None,
                 interpret: bool = True) -> jax.Array:
-    """(..., K) @ (K, N) through the FC mode."""
+    """(..., K) @ (K, N) through the FC mode.
+
+    `tile` is the (bm, bk, bn) GEMM blocking (None keeps the kernel
+    default); `bias` (N,) and `act` run as a fused in-kernel epilogue."""
+    bm, bk, bn = tile if tile is not None else _matmul.DEFAULT_TILE
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    out = _matmul.gfid_matmul(x2, w, interpret=interpret)
+    out = _matmul.gfid_matmul(x2, w, bm=bm, bk=bk, bn=bn, bias=bias,
+                              act=act, interpret=interpret)
     return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 

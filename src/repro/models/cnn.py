@@ -216,14 +216,17 @@ def _maxpool(x: jax.Array, k: int) -> jax.Array:
 
 def _forward(net: CNNDef, params: Dict, x: jax.Array) -> jax.Array:
     """The functional forward pass, engine-routed, context-free — shared by
-    eager `apply_cnn` and the compiled `program(...)` path."""
+    eager `apply_cnn` and the compiled `program(...)` path.
+
+    Bias and ReLU ride each conv/FC op as the engine's fused epilogue: a
+    conv+bias+relu layer is ONE kernel launch on the Pallas backend
+    (epilogue applied in the fp32 accumulator) instead of three ops."""
     if net.kind == "plain":
         for cd in net.convs:
             p = params["conv"][cd.name]
             x = E.conv2d(x, p["w"], stride=cd.stride, pad=cd.pad,
-                         groups=cd.groups) + p["b"]
-            if cd.relu:
-                x = jax.nn.relu(x)
+                         groups=cd.groups, bias=p["b"],
+                         act="relu" if cd.relu else None)
             if cd.pool > 1:
                 x = _maxpool(x, cd.pool)
         x = x.reshape(x.shape[0], -1)
@@ -232,9 +235,8 @@ def _forward(net: CNNDef, params: Dict, x: jax.Array) -> jax.Array:
         x = x.mean(axis=(1, 2))         # global average pool
     for fd in net.fcs:
         p = params["fc"][fd.name]
-        x = E.matmul(x, p["w"]) + p["b"]
-        if fd.relu:
-            x = jax.nn.relu(x)
+        x = E.matmul(x, p["w"], bias=p["b"],
+                     act="relu" if fd.relu else None)
     return x
 
 
@@ -315,11 +317,13 @@ def program(name: str, *, batch: int = 1, dtype=jnp.float32,
 def _resnet50_body(params: Dict, x: jax.Array) -> jax.Array:
     pc = params["conv"]
 
-    def conv(nm, x, stride, pad):
+    def conv(nm, x, stride, pad, act=None):
+        # bias (and relu where it directly follows) fused into the engine op
         p = pc[nm]
-        return E.conv2d(x, p["w"], stride=stride, pad=pad) + p["b"]
+        return E.conv2d(x, p["w"], stride=stride, pad=pad, bias=p["b"],
+                        act=act)
 
-    x = jax.nn.relu(conv("conv1", x, 2, 3))
+    x = conv("conv1", x, 2, 3, act="relu")
     x = _maxpool(jnp.pad(x, ((0, 0), (0, 1), (0, 1), (0, 0)),
                          constant_values=-jnp.inf), 2)
     for si, (n_blocks, c_mid, c_out, first_stride) in enumerate(RESNET50_STAGES):
@@ -327,8 +331,8 @@ def _resnet50_body(params: Dict, x: jax.Array) -> jax.Array:
             s = first_stride if b == 0 else 1
             pre = f"s{si+2}b{b+1}"
             res = x
-            y = jax.nn.relu(conv(f"{pre}_1x1a", x, s, 0))
-            y = jax.nn.relu(conv(f"{pre}_3x3", y, 1, 1))
+            y = conv(f"{pre}_1x1a", x, s, 0, act="relu")
+            y = conv(f"{pre}_3x3", y, 1, 1, act="relu")
             y = conv(f"{pre}_1x1b", y, 1, 0)
             if b == 0:
                 res = conv(f"{pre}_proj", x, s, 0)

@@ -24,11 +24,18 @@ def ffn_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, ParamDef]:
 
 
 def ffn_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
-    act = ACTIVATIONS[cfg.act]
-    h = engine.dense(x, p["w_in"])
+    # Activations the engine can run as a fused in-kernel epilogue ride the
+    # GEMM (one launch on the Pallas backend); others (silu, ...) stay
+    # ordinary post-ops until the epilogue set grows.
+    fused = cfg.act in engine.EPILOGUE_ACTS
     if cfg.gated_ffn:
-        g = engine.dense(x, p["w_gate"])
-        h = act(g) * h
+        h = engine.dense(x, p["w_in"])
+        g = engine.dense(x, p["w_gate"], act=cfg.act if fused else None)
+        if not fused:
+            g = ACTIVATIONS[cfg.act](g)
+        h = g * h
     else:
-        h = act(h)
+        h = engine.dense(x, p["w_in"], act=cfg.act if fused else None)
+        if not fused:
+            h = ACTIVATIONS[cfg.act](h)
     return engine.dense(h.astype(x.dtype), p["w_out"], out_dtype=x.dtype)

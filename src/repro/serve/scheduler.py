@@ -124,7 +124,14 @@ class Scheduler:
 
     config           — `EngineConfig` every bucket compiles under; defaults
                        to `EngineConfig(row_align=8)` so batched results are
-                       bitwise identical to batch-1 results.
+                       bitwise identical to batch-1 results. The config's
+                       `tuning` mode flows into every (program, bucket)
+                       `CompiledNet`: under `"cached"`/`"autotune"` each
+                       bucket executes on the tuned kernel tiles — and
+                       because tile keys are batch-invariant (engine/tune.py)
+                       every bucket of a program shares one tile config, so
+                       the bitwise parity contract above survives tuning and
+                       fused epilogues (pinned in tests/test_scheduler.py).
     policy           — "fifo" (arrival order) or "spf" (shortest-plan-first:
                        serve the program whose per-request analytic latency
                        is smallest; FIFO within a program).
@@ -435,6 +442,7 @@ class Scheduler:
         return {
             "policy": self.policy,
             "max_batch": self.max_batch,
+            "tuning": self.config.tuning,
             "buckets": list(self.buckets),
             "served": served,
             "batches": sum(e.batches for e in self._entries.values()),

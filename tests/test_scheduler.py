@@ -116,6 +116,56 @@ class TestGoldenParity:
             np.testing.assert_array_equal(np.asarray(t.result),
                                           np.asarray(alone.apply(w, x)))
 
+    def test_tuned_fused_requests_bitwise(self, tmp_path):
+        # PR-4 follow-through: the scheduler passes EngineConfig.tuning into
+        # every (program, bucket) CompiledNet. Under tuning="cached" + fused
+        # epilogues on the Pallas backend, batched results must STILL be
+        # bitwise identical to batch-1 — tile keys are batch-invariant
+        # (engine/tune.py), so every bucket runs the same (bk-order) tiles.
+        from repro.engine import tune
+
+        def fn(w, x):
+            h = E.dense(x, w["w1"], bias=w["b1"], act="relu")
+            return E.dense(h, w["w2"], bias=w["b2"])
+
+        def avals(b):
+            return ({"w1": jax.ShapeDtypeStruct((16, 32), jnp.float32),
+                     "b1": jax.ShapeDtypeStruct((32,), jnp.float32),
+                     "w2": jax.ShapeDtypeStruct((32, 10), jnp.float32),
+                     "b2": jax.ShapeDtypeStruct((10,), jnp.float32)},
+                    jax.ShapeDtypeStruct((b, 16), jnp.float32))
+
+        prog = E.trace_program(fn, *avals(1), name="fusedmlp", batch_size=1,
+                               batch_axes=E.infer_batch_axes(avals(1),
+                                                             avals(2)))
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        w = {"w1": jax.random.normal(ks[0], (16, 32), jnp.float32),
+             "b1": jax.random.normal(ks[1], (32,), jnp.float32),
+             "w2": jax.random.normal(ks[2], (32, 10), jnp.float32),
+             "b2": jax.random.normal(ks[3], (10,), jnp.float32)}
+        tune.set_cache_dir(tmp_path)
+        try:
+            cfg = E.EngineConfig(backend="pallas", interpret=True,
+                                 row_align=8, tuning="cached")
+            # seed the cache so "cached" actually resolves tuned tiles
+            tuned = tune.tune_program(prog.ops,
+                                      cfg.replace(tuning="autotune"))
+            assert tuned == 2
+            sched = SCH.Scheduler(config=cfg, max_batch=4)
+            sched.register("fusedmlp", prog, shared_args=(w,))
+            assert sched.stats()["tuning"] == "cached"
+            xs = [jax.random.normal(jax.random.PRNGKey(60 + i), (1, 16))
+                  for i in range(6)]
+            tickets = [sched.submit("fusedmlp", x) for x in xs]
+            sched.drain()
+            alone = E.compile(prog, cfg)
+            assert all(t is not None for t in alone.tiles())
+            for t, x in zip(tickets, xs):
+                np.testing.assert_array_equal(np.asarray(t.result),
+                                              np.asarray(alone.apply(w, x)))
+        finally:
+            tune.set_cache_dir(None)
+
     def test_mixed_queue_keeps_parity(self, serving_config):
         # heterogeneous queue: two different programs interleaved
         big, bw = _mlp_program(64, 128, 32, "big"), _mlp_weights(64, 128, 32)

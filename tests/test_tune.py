@@ -1,0 +1,341 @@
+"""Plan-guided kernel autotuner (engine/tune.py) + fused epilogues.
+
+Covers the PR-4 acceptance contract: fused-epilogue parity against the
+unfused reference on all three backends, the tune-cache round-trip
+(autotune -> persist -> cached reload), corrupted/stale caches degrading
+cleanly to kernel defaults, and `CompiledNet` under `tuning="cached"`
+reproducing `tuning="off"` outputs.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.engine import tune
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+BACKENDS = ("xla", "ref", "pallas")
+
+
+@pytest.fixture()
+def tune_dir(tmp_path):
+    """Redirect the tile cache to a throwaway dir (and drop the memo)."""
+    tune.set_cache_dir(tmp_path)
+    yield tmp_path
+    tune.set_cache_dir(None)
+
+
+def _mlp_program(d_in=64, d_h=96, d_out=40, batch=8, name="tunemlp"):
+    def fn(w, x):
+        h = E.dense(x, w["w1"], bias=w["b1"], act="relu")
+        return E.dense(h, w["w2"], bias=w["b2"])
+
+    def avals(b):
+        return ({"w1": jax.ShapeDtypeStruct((d_in, d_h), jnp.float32),
+                 "b1": jax.ShapeDtypeStruct((d_h,), jnp.float32),
+                 "w2": jax.ShapeDtypeStruct((d_h, d_out), jnp.float32),
+                 "b2": jax.ShapeDtypeStruct((d_out,), jnp.float32)},
+                jax.ShapeDtypeStruct((b, d_in), jnp.float32))
+
+    return E.trace_program(fn, *avals(batch), name=name, batch_size=batch,
+                           batch_axes=E.infer_batch_axes(avals(batch),
+                                                         avals(batch + 1)))
+
+
+def _mlp_weights(d_in=64, d_h=96, d_out=40, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {"w1": jax.random.normal(ks[0], (d_in, d_h), jnp.float32),
+            "b1": jax.random.normal(ks[1], (d_h,), jnp.float32),
+            "w2": jax.random.normal(ks[2], (d_h, d_out), jnp.float32),
+            "b2": jax.random.normal(ks[3], (d_out,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue parity (all three backends)
+# ---------------------------------------------------------------------------
+
+
+class TestFusedEpilogue:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("act", [None, "relu", "gelu"])
+    def test_dense_matches_unfused(self, backend, act):
+        # M=10: deliberately off the 8-row MXU alignment (the old raw-min
+        # clamp produced misaligned blocks here)
+        x = jax.random.normal(jax.random.PRNGKey(0), (10, 48), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (48, 24), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (24,), jnp.float32)
+        base = E.dense(x, w, backend=backend)
+        want = base + b
+        if act is not None:
+            want = E.EPILOGUE_ACTS[act](want)
+        got = E.dense(x, w, bias=b, act=act, backend=backend)
+        if backend == "pallas" and act == "gelu":
+            # the in-kernel tanh evaluates per VMEM block: last-ulp noise
+            # vs the whole-array reference — fp32 accumulation tolerance
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_dense_act_only(self, backend):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16), jnp.float32)
+        got = E.dense(x, w, act="relu", backend=backend)
+        want = jax.nn.relu(E.dense(x, w, backend=backend))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("groups", [1, 2])
+    def test_conv2d_matches_unfused(self, backend, groups):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 11, 11, 8),
+                              jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (3, 3, 8 // groups, 16), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (16,), jnp.float32)
+        base = E.conv2d(x, w, stride=1, pad=1, groups=groups,
+                        backend=backend)
+        got = E.conv2d(x, w, stride=1, pad=1, groups=groups, bias=b,
+                       act="relu", backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(jax.nn.relu(base + b)))
+
+    def test_fused_backends_agree(self):
+        # cross-backend: same fused layer within fp32 accumulation tolerance
+        x = jax.random.normal(jax.random.PRNGKey(0), (6, 64), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (32,), jnp.float32)
+        outs = [E.dense(x, w, bias=b, act="gelu", backend=be)
+                for be in BACKENDS]
+        for other in outs[1:]:
+            np.testing.assert_allclose(outs[0], other, rtol=1e-5, atol=1e-5)
+
+    def test_epilogue_validation(self):
+        x, w = jnp.ones((2, 8)), jnp.ones((8, 4))
+        with pytest.raises(ValueError, match="unknown epilogue activation"):
+            E.dense(x, w, act="tanh")
+        with pytest.raises(ValueError, match="shape"):
+            E.dense(x, w, bias=jnp.ones((5,)))
+        with pytest.raises(ValueError, match="w-free"):
+            # trailing output label is the x-side row dim -> no feature bias
+            E.einsum("ab,bc->ca", x, w, bias=jnp.ones((2,)))
+        # ...but a bare activation is elementwise: valid on any layout
+        got = E.einsum("ab,bc->ca", x, w, act="relu")
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(jax.nn.relu(jnp.einsum("ab,bc->ca", x, w))))
+
+    def test_einsum_noncanonical_falls_back_with_epilogue(self):
+        # batched weights: pallas falls back to the XLA lowering; the
+        # epilogue must ride along
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 4, 8), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 5), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (5,), jnp.float32)
+        got = E.einsum("ecd,edf->ecf", x, w, bias=b, act="relu",
+                       backend="pallas")
+        want = jax.nn.relu(jnp.einsum("ecd,edf->ecf", x, w) + b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Matmul pad path: single-pass, MXU-aligned clamps
+# ---------------------------------------------------------------------------
+
+
+class TestMatmulPad:
+    @pytest.mark.parametrize("m,k,n", [(10, 200, 72), (1, 9, 1000),
+                                       (257, 129, 130), (8, 128, 128)])
+    def test_odd_shapes_match_reference(self, m, k, n):
+        x = jax.random.normal(jax.random.PRNGKey(m), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(n), (k, n), jnp.float32)
+        np.testing.assert_allclose(ops.gfid_matmul(x, w),
+                                   ref.matmul_ref(x, w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_clamp_is_mxu_aligned(self):
+        from repro.kernels.gfid_matmul import clamp_tile
+        # M=10 logits rows: raw min() used to give a misaligned bm=10
+        bm, bk, bn = clamp_tile(10, 200, 72, 256, 512, 256)
+        assert (bm, bk, bn) == (16, 256, 128)
+        assert bm % 8 == 0 and bk % 128 == 0 and bn % 128 == 0
+        # blocks never exceed the aligned problem envelope
+        bm, bk, bn = clamp_tile(300, 4096, 4096, 256, 512, 256)
+        assert (bm, bk, bn) == (256, 512, 256)
+
+    def test_explicit_tile_matches_default(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (12, 300), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (300, 68), jnp.float32)
+        want = ops.gfid_matmul(x, w)
+        got = ops.gfid_matmul(x, w, tile=(8, 512, 128))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Tile keys + candidate generation
+# ---------------------------------------------------------------------------
+
+
+class TestTileKeys:
+    def test_dense_key_drops_rows(self):
+        # same (K, N), different batch rows -> same key (the scheduler's
+        # bitwise parity across batch buckets rides on this)
+        a = E.OpSpec("dense", (1, 64), (64, 32), spec=E.dense_spec(2))
+        b = E.OpSpec("dense", (16, 64), (64, 32), spec=E.dense_spec(2))
+        assert tune.tile_key(a, "pallas", None) \
+            == tune.tile_key(b, "pallas", None)
+
+    def test_key_distinguishes_shapes_backend_accum(self):
+        a = E.OpSpec("dense", (8, 64), (64, 32), spec=E.dense_spec(2))
+        c = E.OpSpec("dense", (8, 64), (64, 48), spec=E.dense_spec(2))
+        assert tune.tile_key(a, "pallas", None) \
+            != tune.tile_key(c, "pallas", None)
+        assert tune.tile_key(a, "pallas", None) \
+            != tune.tile_key(a, "pallas", "bfloat16")
+        assert tune.tile_key(a, "xla", None) is None        # no tile knob
+
+    def test_conv_key_drops_batch(self):
+        a = E.OpSpec("conv2d", (1, 14, 14, 8), (3, 3, 8, 16), stride=1,
+                     pad=1)
+        b = E.OpSpec("conv2d", (4, 14, 14, 8), (3, 3, 8, 16), stride=1,
+                     pad=1)
+        assert tune.tile_key(a, "pallas", None) \
+            == tune.tile_key(b, "pallas", None)
+
+    def test_untunable_ops_have_no_key(self):
+        dw = E.OpSpec("conv1d_dw", (1, 16, 8), (4, 8))
+        assert tune.tile_key(dw, "pallas", None) is None
+        moe = E.OpSpec("dense", (3, 4, 8), (3, 8, 5), spec="ecd,edf->ecf")
+        assert tune.tile_key(moe, "pallas", None) is None   # batched weights
+
+    def test_candidates_aligned_and_pruned(self):
+        op = E.OpSpec("dense", (8, 1000), (1000, 4096), spec=E.dense_spec(2))
+        cands = tune.candidates_for(op)
+        assert 0 < len(cands) <= tune.MAX_CANDIDATES
+        for bm, bk, bn in cands:
+            assert bm % 8 == 0 and bk % 128 == 0 and bn % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# Cache round-trip / corruption / staleness
+# ---------------------------------------------------------------------------
+
+
+class TestTuneCache:
+    def _compile(self, prog, tuning):
+        return E.compile(prog, E.EngineConfig(backend="pallas",
+                                              interpret=True, tuning=tuning))
+
+    def test_autotune_roundtrip(self, tune_dir):
+        prog, w = _mlp_program(), _mlp_weights()
+        x = jax.random.normal(jax.random.PRNGKey(5), (8, 64), jnp.float32)
+
+        off = self._compile(prog, "off")
+        assert off.tiles() == (None, None)
+
+        tuned = self._compile(prog, "autotune")
+        assert all(t is not None for t in tuned.tiles())
+        path = tune.cache_path()
+        assert path.exists()
+        raw = json.loads(path.read_text())
+        assert raw["version"] == tune.CACHE_VERSION
+        assert len(raw["entries"]) == 2
+        for entry in raw["entries"].values():
+            assert entry["kind"] == "dense" and entry["wall_us"] > 0
+
+        # a fresh process (memo dropped) resolves the same tiles from disk
+        tune.set_cache_dir(tune_dir)
+        cached = self._compile(prog, "cached")
+        assert cached.tiles() == tuned.tiles()
+
+        # tuned execution matches untuned within fp32 accum tolerance
+        np.testing.assert_allclose(cached.apply(w, x), off.apply(w, x),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(cached.apply(w, x)),
+                                      np.asarray(tuned.apply(w, x)))
+
+    def test_cached_identical_outputs_off_xla(self, tune_dir):
+        # on a backend with no tile knob, the tuning mode is pure metadata:
+        # outputs are bitwise identical between "cached" and "off"
+        prog, w = _mlp_program(), _mlp_weights()
+        x = jax.random.normal(jax.random.PRNGKey(6), (8, 64), jnp.float32)
+        off = E.compile(prog, E.EngineConfig(tuning="off"))
+        cached = E.compile(prog, E.EngineConfig(tuning="cached"))
+        assert cached.tiles() == (None, None)
+        np.testing.assert_array_equal(np.asarray(cached.apply(w, x)),
+                                      np.asarray(off.apply(w, x)))
+
+    def test_cached_miss_falls_back_to_defaults(self, tune_dir):
+        # empty cache dir: "cached" must run on kernel defaults, silently
+        prog, w = _mlp_program(), _mlp_weights()
+        x = jax.random.normal(jax.random.PRNGKey(7), (8, 64), jnp.float32)
+        net = self._compile(prog, "cached")
+        assert net.tiles() == (None, None)
+        want = self._compile(prog, "off").apply(w, x)
+        np.testing.assert_array_equal(np.asarray(net.apply(w, x)),
+                                      np.asarray(want))
+
+    def test_corrupted_cache_degrades_cleanly(self, tune_dir):
+        tune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+        tune.cache_path().write_text("{not json")
+        tune.set_cache_dir(tune_dir)            # drop memo, force re-read
+        prog, w = _mlp_program(), _mlp_weights()
+        net = self._compile(prog, "cached")
+        assert net.tiles() == (None, None)      # fell back, no crash
+
+    def test_stale_version_ignored(self, tune_dir):
+        op = _mlp_program().ops[0]
+        key = tune.tile_key(op, "pallas", None)
+        tune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+        tune.cache_path().write_text(json.dumps({
+            "version": tune.CACHE_VERSION + 1, "device_kind": "cpu",
+            "entries": {key: {"kind": "dense", "tile": [8, 128, 128]}}}))
+        tune.set_cache_dir(tune_dir)
+        cfg = E.EngineConfig(backend="pallas", interpret=True,
+                             tuning="cached")
+        assert tune.lookup(op, cfg) is None
+
+    def test_malformed_entry_ignored(self, tune_dir):
+        op = _mlp_program().ops[0]
+        key = tune.tile_key(op, "pallas", None)
+        tune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+        tune.cache_path().write_text(json.dumps({
+            "version": tune.CACHE_VERSION, "device_kind": "cpu",
+            "entries": {key: {"kind": "dense", "tile": [8, -1]}}}))
+        tune.set_cache_dir(tune_dir)
+        cfg = E.EngineConfig(backend="pallas", interpret=True,
+                             tuning="cached")
+        assert tune.lookup(op, cfg) is None
+
+    def test_compiled_tiles_stay_pinned_after_cache_fill(self, tune_dir,
+                                                         monkeypatch):
+        # pinned-at-compile contract: a CompiledNet compiled on a cache
+        # miss must keep executing default tiles even if the cache is
+        # filled before its first .apply — replay never re-resolves
+        prog, w = _mlp_program(), _mlp_weights()
+        x = jax.random.normal(jax.random.PRNGKey(8), (8, 64), jnp.float32)
+        missed = self._compile(prog, "cached")      # empty cache -> None
+        assert missed.tiles() == (None, None)
+        self._compile(prog, "autotune")             # now fill the cache
+        def boom(*a, **kw):
+            raise AssertionError("replay consulted the tile cache")
+        monkeypatch.setattr(tune, "lookup", boom)
+        missed.apply(w, x)                          # traces without lookup
+        assert missed.tiles() == (None, None)
+
+    def test_autotune_reuses_cache(self, tune_dir, monkeypatch):
+        prog = _mlp_program()
+        self._compile(prog, "autotune")
+        # a second autotune compile must not re-benchmark anything
+        def boom(*a, **kw):
+            raise AssertionError("re-benchmarked a cached op")
+        monkeypatch.setattr(tune, "benchmark_tile", boom)
+        net = self._compile(prog, "autotune")
+        assert all(t is not None for t in net.tiles())
+
+    def test_invalid_tuning_mode_rejected(self):
+        with pytest.raises(ValueError, match="tuning mode"):
+            E.EngineConfig(tuning="always")
