@@ -9,6 +9,10 @@ emits machine-readable JSON:
     submit-to-completion latency percentiles per policy (fifo / spf)
     against the sequential batch-1 baseline, on a decode smoke workload
     (plus an AlexNet+decode mixed workload without ``--smoke``);
+  * ``BENCH_serve_continuous.json`` — continuous batching over the paged
+    KV block pool: min-of-5 throughput and latency percentiles for
+    continuous vs static-drain vs sequential admission on a mixed-length
+    generation workload (tokens asserted bitwise-identical across modes);
   * ``BENCH_tuning.json`` — the kernel autotuner: steady-state min-of-5
     wallclock per workload on the Pallas backend for ``tuning="off"`` vs
     ``"cached"`` crossed with fused vs unfused epilogues, so the perf
@@ -18,6 +22,7 @@ emits machine-readable JSON:
 
   python -m benchmarks.run [--smoke] [--out BENCH_engine.json]
                            [--serve-out BENCH_serve.json]
+                           [--continuous-out BENCH_serve_continuous.json]
                            [--tuning-out BENCH_tuning.json] [--retune]
 
 ``--smoke`` runs the fast CI path (regression gate): paper tables, the
@@ -240,6 +245,105 @@ def _bench_serve_mixed(scfg) -> dict:
     return out
 
 
+def bench_serve_continuous(smoke: bool) -> dict:
+    """Continuous batching (paged KV pool, per-step admission) vs the
+    static drain-the-batch policy vs sequential, on a mixed-length greedy
+    generation workload.
+
+    The workload is bimodal on purpose (short 2-step and long 14-step
+    requests interleaved, queue deeper than the batch): under drain
+    admission the short requests finish early and their rows sit idle
+    until the whole batch empties, while continuous admission refills
+    them the same step. Decode runs at one fixed bucket (= max_batch) in
+    both modes, so the comparison isolates utilization — same per-step
+    cost, fewer steps. All three modes produce bitwise-identical tokens
+    (the golden-parity contract); the bench asserts it while measuring.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import reduced
+    from repro.models import transformer as T
+    from repro.serve.scheduler import ContinuousScheduler, \
+        latency_percentiles
+
+    cfg = reduced("smollm_135m")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    n_req = 12 if smoke else 24
+    max_batch, max_len, num_blocks, block_size = 4, 32, 64, 8
+    work = []
+    for i in range(n_req):
+        plen = 4 if i % 2 else 8
+        steps = 2 if i % 2 else 14
+        work.append(([1 + (i * 7 + j) % 199 for j in range(plen)], steps))
+    total_tokens = sum(n for _, n in work)
+
+    repeats = 5
+    modes = {"continuous": ("continuous", max_batch),
+             "static": ("drain", max_batch),
+             "sequential": ("continuous", 1)}
+    out, tokens_by_mode = {}, {}
+    for mode, (admission, mb) in modes.items():
+        sched = ContinuousScheduler(
+            cfg, params, max_len=max_len, num_blocks=num_blocks,
+            block_size=block_size, max_batch=mb, buckets=(mb,),
+            admission=admission)
+        for p, n in work:                                  # warm the jits
+            sched.submit(p, n)
+        sched.run()
+        wall, tickets = float("inf"), []
+        for _ in range(repeats):
+            tickets = [sched.submit(p, n) for p, n in work]
+            t0 = time.perf_counter()
+            sched.run()
+            wall = min(wall, time.perf_counter() - t0)
+        tokens_by_mode[mode] = [t.tokens for t in tickets]
+        stats = sched.stats()
+        out[mode] = {
+            "wall_s": wall,
+            "throughput_tps": total_tokens / wall,
+            "decode_fill": stats["decode_fill"],
+            "decode_steps_per_run": stats["steps"] // (repeats + 1),
+            "evicted": stats["evicted"],
+            "pool_free_low_water": stats["pool"]["free_low_water"],
+            **latency_percentiles(tickets),
+        }
+
+    assert tokens_by_mode["continuous"] == tokens_by_mode["static"] \
+        == tokens_by_mode["sequential"], \
+        "golden-parity violation across serving modes"
+
+    return {
+        "bench": "serve_continuous",
+        "workload": {"requests": n_req, "total_tokens": total_tokens,
+                     "max_batch": max_batch, "max_len": max_len,
+                     "num_blocks": num_blocks, "block_size": block_size,
+                     "steps_mix": sorted({n for _, n in work})},
+        "modes": out,
+        "parity": "bitwise-identical tokens across modes",
+        "continuous_vs_static_speedup":
+            out["static"]["wall_s"] / out["continuous"]["wall_s"],
+        "continuous_vs_sequential_speedup":
+            out["sequential"]["wall_s"] / out["continuous"]["wall_s"],
+    }
+
+
+def emit_continuous_json(path: str, smoke: bool, emit=print) -> None:
+    result = bench_serve_continuous(smoke)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    n = result["workload"]["total_tokens"]
+    for mode, r in result["modes"].items():
+        emit(f"serve_continuous/{mode},{r['wall_s']/n*1e6:.0f},"
+             f"tps={r['throughput_tps']:.1f};fill={r['decode_fill']:.3f};"
+             f"p95_ms={r['p95_ms']:.2f}")
+    emit(f"serve_continuous/speedup,0,continuous_vs_static="
+         f"{result['continuous_vs_static_speedup']:.2f}x;"
+         f"continuous_vs_sequential="
+         f"{result['continuous_vs_sequential_speedup']:.2f}x")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 # ---------------------------------------------------------------------------
 # Tuning bench: tuning="off"/"cached" x fused/unfused epilogues
 # ---------------------------------------------------------------------------
@@ -411,6 +515,9 @@ def main(argv=None) -> None:
                     help="machine-readable engine bench output path")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="machine-readable serve-scheduler bench output path")
+    ap.add_argument("--continuous-out", default="BENCH_serve_continuous.json",
+                    help="machine-readable continuous-batching bench "
+                         "output path")
     ap.add_argument("--tuning-out", default="BENCH_tuning.json",
                     help="machine-readable kernel-tuning bench output path")
     ap.add_argument("--retune", action="store_true",
@@ -438,6 +545,7 @@ def main(argv=None) -> None:
     nets = ["alexnet"] if args.smoke else ["alexnet", "vgg16", "resnet50"]
     emit_engine_json(args.out, nets)
     emit_serve_json(args.serve_out, args.smoke)
+    emit_continuous_json(args.continuous_out, args.smoke)
     emit_tuning_json(args.tuning_out, args.smoke, args.retune)
 
     if not args.smoke:

@@ -37,8 +37,8 @@ package for one release.
 """
 from repro.engine import tune  # noqa: F401
 from repro.engine.api import (  # noqa: F401
-    capturing, conv1d_depthwise, conv2d, dense, einsum, matmul, proj,
-    replaying)
+    capturing, conv1d_depthwise, conv2d, dense, einsum, matmul, paged_gather,
+    proj, replaying)
 from repro.engine.config import (  # noqa: F401
     EngineConfig, current_config, default_backend, in_config_context,
     set_default_backend, set_default_config, set_interpret, using_backend,
@@ -50,7 +50,7 @@ from repro.engine.ledger import (  # noqa: F401
     Ledger, OpRecord, is_tracking, record, tracking)
 from repro.engine.plan import (  # noqa: F401
     EnginePlan, OpSpec, auto_backend, dense_spec, parse_einsum, plan_conv1d_depthwise,
-    plan_conv2d, plan_einsum, plan_op)
+    plan_conv2d, plan_einsum, plan_gather, plan_op)
 from repro.engine.program import (  # noqa: F401
     CompiledNet, NetworkPlan, Program, compile, infer_batch_axes,
     plan_network, trace_program)

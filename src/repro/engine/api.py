@@ -313,6 +313,33 @@ def proj(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
                  interpret=interpret)
 
 
+def paged_gather(pool: jax.Array, table: jax.Array, *,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Paged-KV block gather (serving memory move).
+
+    pool:  (num_blocks, block_size, *feature) — a `serve.kv_pool` block
+           pool array.
+    table: (B, blocks_per_req) int32 — per-request block ids.
+    Returns (B, blocks_per_req * block_size, *feature): each request's
+    dense cache view reconstructed from its blocks.
+
+    Routed through the engine like any dense op so compiled serving
+    programs stay honest about reconstruction cost: the op records a
+    zero-MAC "gather" plan (cycles priced as a pure memory move), is
+    captured into `Program` graphs, and dispatches per backend — the
+    Pallas scalar-prefetch kernel (`kernels.paged`) or the XLA `take`
+    reference, bitwise identical by the kernel parity test.
+    """
+    op = planlib.OpSpec("gather", tuple(map(int, pool.shape)),
+                        tuple(map(int, table.shape)))
+    plan = _plan_for(op, backend)
+    ledger_mod.record(plan)
+    be = dispatch.get_backend(plan.backend)
+    return dispatch.gather_impl(be)(pool, table, plan,
+                                    interpret=_interp(interpret))
+
+
 # `matmul` mirrors the legacy `MultiModeEngine.matmul` contract exactly:
 # fp32 accumulation, result cast back to the input dtype (the fused
 # epilogue, when given, runs before the cast — i.e. in fp32).

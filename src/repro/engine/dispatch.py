@@ -62,6 +62,10 @@ class EngineBackend:
     conv2d: Callable[..., jax.Array]
     conv1d_depthwise: Callable[..., jax.Array]
     einsum: Callable[..., jax.Array]
+    # Serving paged-KV block gather (`engine.paged_gather`). Defaults to
+    # None so backends registered before the op existed keep working:
+    # dispatch falls back to the XLA `take` lowering (`xla_gather`).
+    gather: Optional[Callable[..., jax.Array]] = None
 
 
 _REGISTRY: Dict[str, EngineBackend] = {}
@@ -108,6 +112,22 @@ def _xla_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret,
     else:
         out = jnp.einsum(spec, x, w)
     return apply_epilogue(out, bias, act)
+
+
+def xla_gather(pool, table, plan, *, interpret):
+    """Reference paged-KV gather: pool (num_blocks, block_size, *feature)
+    indexed by table (B, blocks_per_req) int32 -> (B, blocks_per_req *
+    block_size, *feature) — a bitwise-exact block copy (`jnp.take`), the
+    parity baseline for the Pallas kernel and the fallback for backends
+    registered without a `gather` entry."""
+    b, blocks_per_req = table.shape
+    out = jnp.take(pool, table, axis=0)
+    return out.reshape((b, blocks_per_req * pool.shape[1]) + pool.shape[2:])
+
+
+def gather_impl(backend: "EngineBackend") -> Callable[..., jax.Array]:
+    """The backend's paged-gather entry, or the XLA fallback."""
+    return backend.gather if backend.gather is not None else xla_gather
 
 
 # ---------------------------------------------------------------------------
@@ -160,9 +180,14 @@ def _pallas_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret,
                            interpret=interpret)
 
 
+def _pallas_gather(pool, table, plan, *, interpret):
+    from repro.kernels import ops
+    return ops.paged_gather(pool, table, interpret=interpret)
+
+
 register_backend(EngineBackend("xla", _xla_conv2d, _xla_conv1d_dw,
-                               _xla_einsum))
+                               _xla_einsum, gather=xla_gather))
 register_backend(EngineBackend("ref", _ref_conv2d, _ref_conv1d_dw,
-                               _xla_einsum))
+                               _xla_einsum, gather=xla_gather))
 register_backend(EngineBackend("pallas", _pallas_conv2d, _pallas_conv1d_dw,
-                               _pallas_einsum))
+                               _pallas_einsum, gather=_pallas_gather))

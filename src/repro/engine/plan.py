@@ -44,7 +44,7 @@ class OpSpec:
     `EngineConfig` via `plan_op`.
     """
 
-    kind: str                       # "conv2d" | "conv1d_dw" | "dense"
+    kind: str                       # "conv2d" | "conv1d_dw" | "dense" | "gather"
     x_shape: Shape
     w_shape: Shape
     spec: str = ""                  # einsum spec ("dense" kind only)
@@ -55,7 +55,7 @@ class OpSpec:
     name: str = dataclasses.field(default="", compare=False)  # layer label
 
     def __post_init__(self) -> None:
-        if self.kind not in ("conv2d", "conv1d_dw", "dense"):
+        if self.kind not in ("conv2d", "conv1d_dw", "dense", "gather"):
             raise ValueError(f"unknown op kind {self.kind!r}")
 
 
@@ -67,6 +67,8 @@ def plan_op(op: OpSpec, backend: str) -> EnginePlan:
                            op.groups, backend)
     if op.kind == "conv1d_dw":
         return plan_conv1d_depthwise(op.x_shape, op.w_shape, backend)
+    if op.kind == "gather":
+        return plan_gather(op.x_shape, op.w_shape, backend)
     return plan_einsum(op.spec, op.x_shape, op.w_shape, backend)
 
 
@@ -178,6 +180,31 @@ def plan_conv1d_depthwise(x_shape: Shape, w_shape: Shape,
         tiling=modes.mxu_tiling_for_mode(mode, 1, d),
         cycles=cost.cycles * d * b, ma_words=cost.ma_total_words * d * b,
         macs=cost.macs * d * b)
+
+
+# ---------------------------------------------------------------------------
+# paged-KV block gather (serving memory move)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def plan_gather(x_shape: Shape, w_shape: Shape, backend: str) -> EnginePlan:
+    """x: (num_blocks, block_size, *feature) paged KV pool; w: (B,
+    blocks_per_req) int32 block table. A pure memory move — zero MACs —
+    priced at the words gathered (one read + one write per element, moved
+    through the array at one word per PE per cycle), so a serving plan that
+    includes paged-KV reconstruction stays honest about where its cycles go
+    instead of booking the gather as free."""
+    block_size = int(x_shape[1])
+    feature = math.prod(int(v) for v in x_shape[2:])
+    b, blocks_per_req = (int(v) for v in w_shape)
+    words = b * blocks_per_req * block_size * feature
+    mode = modes.fc_mode()
+    return EnginePlan(
+        kind="gather", backend=backend, mode=mode,
+        tiling=modes.mxu_tiling_for_mode(mode, 1, 1),
+        cycles=-(-words // modes.MMIE_NUM_PES),
+        ma_words=2 * words, macs=0,
+        note="paged-KV block gather (pure memory move)")
 
 
 # ---------------------------------------------------------------------------

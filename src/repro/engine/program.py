@@ -147,6 +147,12 @@ def _rebatch_aval(aval: Any, axis: int, old: int, new: int) -> Any:
 
 def _rebatch_op(op: OpSpec, old: int, new: int) -> OpSpec:
     """Rewrite one op's batch dim (leading x axis) from `old` to `new`."""
+    if op.kind == "gather":
+        # the batch lives on the block table (w) leading dim; x is the pool,
+        # whose num_blocks may coincidentally equal the old batch size
+        if op.w_shape and op.w_shape[0] == old:
+            return dataclasses.replace(op, w_shape=(new,) + op.w_shape[1:])
+        return op
     if not op.x_shape or op.x_shape[0] != old:
         return op
     if op.kind == "dense":
@@ -214,6 +220,11 @@ class NetworkPlan:
     def fc_plans(self) -> Tuple[EnginePlan, ...]:
         return tuple(p for p in self.plans if p.kind == "dense")
 
+    @property
+    def gather_plans(self) -> Tuple[EnginePlan, ...]:
+        """Paged-KV gather ops (serving memory moves, zero MACs)."""
+        return tuple(p for p in self.plans if p.kind == "gather")
+
     # -- cycles / latency --------------------------------------------------
 
     @property
@@ -225,6 +236,10 @@ class NetworkPlan:
         return sum(p.cycles for p in self.fc_plans)
 
     @property
+    def gather_cycles(self) -> int:
+        return sum(p.cycles for p in self.gather_plans)
+
+    @property
     def conv_latency_s(self) -> float:
         return self.conv_cycles / modes.MMIE_CONV_FREQ_HZ
 
@@ -233,8 +248,15 @@ class NetworkPlan:
         return self.fc_cycles / modes.MMIE_FC_FREQ_HZ
 
     @property
+    def gather_latency_s(self) -> float:
+        """Paged-KV reconstruction time, priced at the conv (memory-system)
+        clock — a pure data move never waits on the 40 MHz FC array."""
+        return self.gather_cycles / modes.MMIE_CONV_FREQ_HZ
+
+    @property
     def total_latency_s(self) -> float:
-        return self.conv_latency_s + self.fc_latency_s
+        return self.conv_latency_s + self.fc_latency_s \
+            + self.gather_latency_s
 
     # -- memory accesses ---------------------------------------------------
 
@@ -336,13 +358,15 @@ class CompiledNet:
 
     def __init__(self, program: Program, config: EngineConfig,
                  plan: NetworkPlan,
-                 exec_pairs: Optional[Tuple[Tuple[OpSpec, EnginePlan], ...]]):
+                 exec_pairs: Optional[Tuple[Tuple[OpSpec, EnginePlan], ...]],
+                 donate_argnums: Tuple[int, ...] = ()):
         self.program = program
         self.config = config
         self.plan = plan
         self.exec_pairs = exec_pairs
         self._jitted = (None if program.fn is None
-                        else jax.jit(self._run))
+                        else jax.jit(self._run,
+                                     donate_argnums=donate_argnums))
 
     def _run(self, *args):
         with using_config(self.config), api.replaying(self.exec_pairs):
@@ -375,7 +399,8 @@ class CompiledNet:
 
 
 def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
-            cfg: Optional[EngineConfig] = None) -> CompiledNet:
+            cfg: Optional[EngineConfig] = None, *,
+            donate_argnums: Tuple[int, ...] = ()) -> CompiledNet:
     """Two-phase entry point: plan the whole network under `cfg`, return a
     `CompiledNet` with the analytic `NetworkPlan` and a jitted `.apply`.
 
@@ -389,6 +414,10 @@ def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
     every Pallas-bound op's tuned tile config is resolved at compile time
     and pinned into its exec pair — under `"autotune"` cache misses are
     benchmarked (and persisted) now, so `.apply` never pays tuning cost.
+
+    `donate_argnums` is forwarded to `jax.jit` for `.apply`: a serving
+    step that threads large mutable state (the paged KV pool) through the
+    compiled net donates it instead of copying it every step.
     """
     cfg = current_config() if cfg is None else cfg
     net_plan = plan_network(program, cfg)
@@ -399,4 +428,5 @@ def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
             (op, tunelib.attach(op, plan_op(op, _select_backend(op, cfg)),
                                 cfg, allow_autotune=True))
             for op in exec_ops)
-    return CompiledNet(program, cfg, net_plan, exec_pairs)
+    return CompiledNet(program, cfg, net_plan, exec_pairs,
+                       donate_argnums=donate_argnums)

@@ -18,6 +18,7 @@ from repro.kernels import conv1d as _conv1d
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gfid_conv as _conv
 from repro.kernels import gfid_matmul as _matmul
+from repro.kernels import paged as _paged
 
 
 def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
@@ -87,6 +88,15 @@ def gfid_conv1d_depthwise(x: jax.Array, w: jax.Array, *, causal: bool = True,
                           interpret: bool = True) -> jax.Array:
     return _conv1d.gfid_conv1d_depthwise(
         x, w, causal=causal, interpret=interpret).astype(x.dtype)
+
+
+def paged_gather(pool: jax.Array, table: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """Paged-KV block gather: pool (num_blocks, block_size, *feature) indexed
+    by table (B, blocks_per_req) int32 -> (B, blocks_per_req * block_size,
+    *feature). Bitwise identical to the XLA `jnp.take` reference — a gather
+    is a copy, so there is no accumulation-order caveat."""
+    return _paged.paged_gather(pool, table, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,

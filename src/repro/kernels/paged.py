@@ -1,0 +1,76 @@
+"""Paged-KV block gather kernel (continuous-batching decode serving).
+
+The serve-side KV pool (`repro.serve.kv_pool`) stores every request's cache
+as fixed-size blocks scattered through one preallocated
+`(num_blocks, block_size, feature)` array, addressed by a per-request block
+table — the flashinfer/vLLM page-table layout. Each decode step must
+reconstruct a dense `(B, seq, feature)` cache view from those blocks; this
+module is that reconstruction as one Pallas kernel launch.
+
+The block table rides in as a *scalar-prefetch* operand
+(`pltpu.PrefetchScalarGridSpec`): its values are available to the BlockSpec
+index maps before the kernel body runs, so each grid step DMAs exactly the
+pool block the table names — the gather is pure data movement, no gather
+instruction in the kernel body. Grid is (batch, blocks_per_req); grid step
+(b, j) copies pool block `table[b, j]` into row-slice j of request b.
+
+A gather is a bitwise-exact copy, so the kernel is parity-tested against
+the XLA reference (`jnp.take`, `engine.dispatch.xla_gather`) in
+tests/test_kernels.py — the two paths must agree to the last bit for the
+serving parity contract to hold.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(table_ref, pool_ref, out_ref):
+    # table_ref (scalar prefetch) already steered the BlockSpec index maps;
+    # the body is a straight block copy.
+    del table_ref
+    out_ref[...] = pool_ref[...].reshape(out_ref.shape)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(pool: jax.Array, table: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """Gather paged KV blocks into dense per-request caches.
+
+    pool:  (num_blocks, block_size, *feature) — the block pool.
+    table: (B, blocks_per_req) int32 — per-request block ids (0 = the
+           reserved dummy block; its contents are garbage by contract and
+           must be masked downstream, exactly as the dense path masks
+           positions beyond `pos`).
+    Returns (B, blocks_per_req * block_size, *feature), bitwise identical
+    to `jnp.take(pool, table, axis=0)` reshaped.
+    """
+    num_blocks, block_size = pool.shape[:2]
+    feature = pool.shape[2:]
+    f = math.prod(feature) if feature else 1
+    b, blocks_per_req = table.shape
+    pool2 = pool.reshape(num_blocks, block_size, f)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, blocks_per_req),
+        in_specs=[
+            pl.BlockSpec((1, block_size, f),
+                         lambda bi, j, tbl: (tbl[bi, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_size, f),
+                               lambda bi, j, tbl: (bi, j, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (b, blocks_per_req, block_size, f), pool.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pool2)
+    return out.reshape((b, blocks_per_req * block_size) + feature)

@@ -307,7 +307,14 @@ def init_cross_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
 def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                      pos: jax.Array, kind: str,
                      ) -> Tuple[jax.Array, Dict]:
-    """x: (B, 1, D); pos: scalar int32 absolute position. Returns (out, cache')."""
+    """x: (B, 1, D); pos: scalar int32 absolute position, or a (B,) int32
+    vector of per-row positions (continuous batching: every request in the
+    batch sits at its own depth). Returns (out, cache').
+
+    The vector path is bitwise identical per row to the scalar path at that
+    row's position: rope sees the same per-row position values, the cache
+    write lands on the same per-row slot, and masked scores contribute
+    exactly 0.0 to the softmax-weighted sum either way."""
     if cfg.mla is not None and kind != CROSS_ATTN:
         return mla_decode(cfg, p, x, cache, pos)
     b = x.shape[0]
@@ -332,17 +339,22 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
         theta = (cfg.rope_theta_local
                  if (kind == LOCAL_ATTN and cfg.rope_theta_local)
                  else cfg.rope_theta)
-        posv = jnp.full((b, 1), pos)
+        posv = (pos[:, None] if jnp.ndim(pos) else jnp.full((b, 1), pos))
         q = apply_rope(q, posv, theta)
         k = apply_rope(k, posv, theta)
 
     window = cfg.window_size if kind == LOCAL_ATTN else 0
     cache_len = cache["k"].shape[1]
     slot = pos % cache_len if window else pos          # ring buffer for SWA
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                  (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                  (0, slot, 0, 0))
+    if jnp.ndim(pos):
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
 
     g = cfg.n_heads // cfg.n_kv_heads
     qg = q.reshape(b, cfg.n_kv_heads, g, hd)
@@ -351,14 +363,22 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     if cfg.attn_softcap:
         s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
     idx = jnp.arange(cache_len)
-    if window:
+    if jnp.ndim(pos):
+        if window:
+            age = (slot[:, None] - idx[None, :]) % cache_len
+            valid = (age < window) & (age <= pos[:, None])
+        else:
+            valid = idx[None, :] <= pos[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    elif window:
         # ring buffer: slot i holds absolute position matching i modulo len,
         # valid iff within `window` of pos and <= pos.
         age = (slot - idx) % cache_len
         valid = (age < window) & (age <= pos)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
     else:
         valid = idx <= pos
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgu,bukd->bkgd", pr, cv,
                    preferred_element_type=jnp.float32)
@@ -378,17 +398,25 @@ def mla_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     cq = rms_norm(engine.proj(x, p["wdq"]), p["q_norm"], cfg.norm_eps)
     q = engine.proj(cq, p["wuq"]).reshape(b, 1, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
-    posv = jnp.full((b, 1), pos)
+    posv = (pos[:, None] if jnp.ndim(pos) else jnp.full((b, 1), pos))
     q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
 
     dkv = engine.proj(x, p["wdkv"])
     c_new, kr_new = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
     kr_new = apply_rope(kr_new, posv, cfg.rope_theta)
-    c_kv = jax.lax.dynamic_update_slice(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    if jnp.ndim(pos):
+        rows = jnp.arange(b)
+        c_kv = cache["c_kv"].at[rows, pos].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, pos].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+    else:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
+            (0, pos, 0))
 
     # Absorb W_uk into q: score(t) = q_nope^T W_uk c_t + q_rope^T k_rope_t.
     wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
@@ -399,8 +427,12 @@ def mla_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
          + jnp.einsum("bhd,bud->bhu", q_rope[:, 0].astype(jnp.float32),
                       k_rope.astype(jnp.float32)))
     s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    valid = jnp.arange(c_kv.shape[1]) <= pos
-    s = jnp.where(valid[None, None], s, NEG_INF)
+    if jnp.ndim(pos):
+        valid = jnp.arange(c_kv.shape[1])[None, :] <= pos[:, None]
+        s = jnp.where(valid[:, None], s, NEG_INF)
+    else:
+        valid = jnp.arange(c_kv.shape[1]) <= pos
+        s = jnp.where(valid[None, None], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhu,buc->bhc", pr, c_kv.astype(jnp.float32))
     wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)

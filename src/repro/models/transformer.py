@@ -348,7 +348,9 @@ def decode_step(cfg: ModelConfig, params: Dict, state: Dict,
                 tokens: jax.Array, pos: jax.Array,
                 ctx: Optional[FwdContext] = None,
                 ) -> Tuple[jax.Array, Dict]:
-    """One decode step. tokens: (B, 1) int32; pos: scalar absolute position.
+    """One decode step. tokens: (B, 1) int32; pos: scalar absolute position,
+    or a (B,) int32 vector of per-row positions (continuous batching —
+    see `attention_decode` for the per-row bitwise-parity contract).
     Returns (logits (B, 1, V), new state)."""
     group, rem = _group_layout(cfg)
     x = embed_lookup(params["embed"], tokens, scale_by_dim=cfg.scale_embed)

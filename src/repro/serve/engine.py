@@ -192,6 +192,74 @@ def decode_program(cfg: ModelConfig, batch: int,
                            batch_size=batch, batch_axes=axes)
 
 
+def paged_decode_program(cfg: ModelConfig, layout, batch: int) -> "E.Program":
+    """One continuous-batching decode step over a paged KV pool, as an
+    `engine.Program` — the block-pool replacement for the dense
+    `decode_program`/`decode_state_shapes` serving path.
+
+    Signature of the traced fn:
+        (params, pool_arrays, tables (B, blocks_per_req) i32,
+         slots (B,) i32, tokens (B, 1) i32, pos (B,) i32)
+        -> (next_token (B,) i32, pool_arrays')
+
+    Each step gathers every row's dense state view from its blocks
+    (`engine.paged_gather` — recorded ops, so the program's `NetworkPlan`
+    prices the reconstruction), runs the unchanged `T.decode_step` at
+    per-row positions, and scatters back only the slot each row wrote.
+    `layout` is a `serve.kv_pool.PagedLayout`. Compile with
+    `engine.compile(prog, cfg, donate_argnums=(1,))` so the pool arrays
+    are donated through every step instead of copied.
+    """
+    params_sh = T.param_shapes(cfg)
+    npb = layout.blocks_per_req
+
+    def fn(params, arrays, tables, slots, tokens, pos):
+        state = layout.gather(arrays, tables, slots)
+        logits, new_state = T.decode_step(cfg, params, state, tokens, pos)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return tok, layout.scatter_step(arrays, new_state, tables, slots,
+                                        pos)
+
+    avals = (params_sh, layout.array_avals(),
+             jax.ShapeDtypeStruct((batch, npb), jnp.int32),
+             jax.ShapeDtypeStruct((batch,), jnp.int32),
+             jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+             jax.ShapeDtypeStruct((batch,), jnp.int32))
+    return E.trace_program(
+        fn, *avals,
+        name=f"{cfg.name}-paged-decode{layout.max_len}"
+             f"x{layout.block_size}b{batch}")
+
+
+def prefill_ingest_program(cfg: ModelConfig, layout,
+                           seq: int) -> "E.Program":
+    """Prefill one request at its exact prompt length and ingest the
+    resulting dense state into the paged pool (the continuous scheduler's
+    admission path; compiled per distinct prompt length so the GEMM M
+    dimension — and with it bitwise parity against a solo prefill — never
+    depends on batchmates).
+
+    Signature: (params, pool_arrays, table_row (blocks_per_req,) i32,
+    slot () i32, tokens (1, seq) i32) -> (first_token (1,) i32, arrays').
+    """
+    params_sh = T.param_shapes(cfg)
+    n_blocks = -(-seq // layout.block_size)
+
+    def fn(params, arrays, table_row, slot, tokens):
+        logits, state = T.prefill(cfg, params, {"tokens": tokens},
+                                  layout.max_len)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok, layout.scatter_prefill(arrays, state, table_row, slot,
+                                           n_blocks)
+
+    avals = (params_sh, layout.array_avals(),
+             jax.ShapeDtypeStruct((layout.blocks_per_req,), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((1, seq), jnp.int32))
+    return E.trace_program(
+        fn, *avals, name=f"{cfg.name}-prefill-ingest{seq}")
+
+
 def greedy_generate(cfg: ModelConfig, params, batch_in: Dict, steps: int,
                     max_len: int, ledger: Optional[E.Ledger] = None):
     """Single-host convenience loop (examples / tests): prefill then greedy

@@ -76,6 +76,9 @@ class Ticket:
     args: Tuple[Any, ...]           # per-request (batched-position) args
     submit_s: float
     unit_latency_s: float
+    deadline_s: Optional[float] = None  # absolute perf_counter deadline
+    cancelled: bool = False
+    expired: bool = False
     ledger: E.Ledger = dataclasses.field(default_factory=E.Ledger)
     result: Any = None
     done: bool = False
@@ -326,12 +329,16 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
-    def submit(self, name: str, *args: Any) -> Ticket:
+    def submit(self, name: str, *args: Any,
+               timeout_s: Optional[float] = None) -> Ticket:
         """Admit one request for program `name`.
 
         `args` are the per-request values of the program's batched argument
         positions, in order, each shaped exactly like the program's batch-1
         avals (leading batch axis of size 1 on the recorded batch axes).
+        `timeout_s` sets a wall-clock deadline relative to now; a ticket
+        still queued when its deadline passes is dropped (marked
+        `expired`) instead of served.
         Raises `AdmissionError` when the queue's plan-cost budget is full,
         `KeyError` for unknown programs, `ValueError` for shape mismatches.
         """
@@ -360,11 +367,35 @@ class Scheduler:
                 f"queue plan-cost {self.queue_cost_s():.6f}s + request "
                 f"{unit:.6f}s exceeds max_queue_cost_s="
                 f"{self.max_queue_cost_s:.6f}s ({len(self._queue)} pending)")
+        now = time.perf_counter()
         ticket = Ticket(rid=self._next_rid, model=name, args=tuple(args),
-                        submit_s=time.perf_counter(), unit_latency_s=unit)
+                        submit_s=now, unit_latency_s=unit,
+                        deadline_s=None if timeout_s is None
+                        else now + timeout_s)
         self._next_rid += 1
         self._queue.append(ticket)
         return ticket
+
+    def cancel(self, ticket: Ticket) -> bool:
+        """Drop a still-queued ticket; returns False once it already ran
+        (results are not retracted) or was previously dropped."""
+        if ticket.done or ticket.cancelled or ticket.expired:
+            return False
+        ticket.cancelled = True
+        ticket.args = ()
+        self._queue = [t for t in self._queue if t is not ticket]
+        return True
+
+    def _expire(self) -> None:
+        now = time.perf_counter()
+        keep = []
+        for t in self._queue:
+            if t.deadline_s is not None and now > t.deadline_s:
+                t.expired = True
+                t.args = ()
+            else:
+                keep.append(t)
+        self._queue = keep
 
     # -- dispatch -----------------------------------------------------------
 
@@ -382,6 +413,7 @@ class Scheduler:
 
     def step(self) -> List[Ticket]:
         """Form and execute one batch; returns the tickets it served."""
+        self._expire()
         if not self._queue:
             return []
         name = self._pick_model()
@@ -455,13 +487,447 @@ class Scheduler:
         }
 
 
-def latency_percentiles(tickets: Sequence[Ticket],
+def latency_percentiles(tickets: Sequence[Any],
                         pcts: Sequence[float] = (50, 95, 99),
                         ) -> Dict[str, float]:
-    """Wall-clock submit-to-completion percentiles over served tickets."""
+    """Wall-clock submit-to-completion percentiles over served tickets
+    (works for both `Ticket` and `GenTicket`)."""
     import numpy as np
     lats = sorted(t.latency_s for t in tickets if t.done)
     if not lats:
         return {f"p{p:g}_ms": 0.0 for p in pcts}
     return {f"p{p:g}_ms": float(np.percentile(np.asarray(lats), p) * 1e3)
             for p in pcts}
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged KV block pool
+# ---------------------------------------------------------------------------
+
+_GEN_STATUSES = ("queued", "running", "done", "cancelled", "expired")
+
+
+@dataclasses.dataclass(eq=False)
+class GenTicket:
+    """One generation request in the continuous scheduler.
+
+    `prompt` is the submitted prompt, immutable; `context` is the prefix
+    the request's cache currently encodes (grows past `prompt` only when a
+    preemption forces generated tokens back through prefill). `tokens` is
+    every token generated so far; `status` walks
+    queued -> running -> done | cancelled | expired.
+    """
+
+    rid: int
+    prompt: Tuple[int, ...]
+    steps: int
+    submit_s: float
+    deadline_s: Optional[float] = None  # absolute perf_counter deadline
+    context: Tuple[int, ...] = ()
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    status: str = "queued"
+    pos: int = 0                    # next cache position to be written
+    preemptions: int = 0
+    done_s: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    @property
+    def latency_s(self) -> float:
+        if self.status not in ("done", "cancelled", "expired"):
+            return float("nan")
+        return self.done_s - self.submit_s
+
+
+class ContinuousScheduler:
+    """Per-step admission decode scheduler over a paged `KVBlockPool`.
+
+    Where `Scheduler` forms a batch and *drains* it (every request in a
+    dispatch enters and leaves together, so the batch hollows out as short
+    requests finish), this scheduler re-forms the decode batch *every
+    step*: finished rows leave, waiting requests join (their prompt runs
+    through a batch-1 `prefill_ingest_program` compiled at its exact
+    length, interleaved between decode steps), and each request's KV cache
+    lives in pool blocks allocated on demand — no dense
+    `(max_batch, max_len)` buffers, no stranded rows.
+
+    Admission is driven by pool occupancy plus the analytic plan:
+
+      * blocks    — a request joins only when the pool can cover its full
+        prompt plus the next decode write (`free_blocks`), and is evicted
+        (youngest-first) when a longer-lived request needs a block the
+        pool cannot supply;
+      * plan cost — `max_live_cost_s` bounds the running set by the
+        summed MMIE-projected latency of one batch-1 paged decode step
+        per live request (`NetworkPlan.total_latency_s` of
+        `paged_decode_program`, gather reconstruction included), the same
+        analytic admission currency `Scheduler.max_queue_cost_s` uses.
+
+    Parity contract (tests/test_continuous.py): under the default
+    `EngineConfig(row_align=8)` a request's tokens are bitwise identical
+    whether it ran solo (`max_batch=1`), rode a static drained batch
+    (`admission="drain"`), or rode a continuous batch in which neighbours
+    joined and finished mid-generation. Three mechanisms compose: prefill
+    is always batch-1 at the exact prompt length; `row_align` makes every
+    decode bucket's GEMMs row-for-row identical; the decode mask zeroes
+    positions past `pos` exactly, so recycled-block garbage never reaches
+    a logit (see kv_pool.py). The one carve-out is *preemption*: a
+    preempted request re-prefills its prompt + generated tokens, and a
+    length-S+k prefill is not bitwise-guaranteed against S-prefill +
+    k decode steps — so preemption is surfaced (`GenTicket.preemptions`)
+    and never happens when the pool is sized for the offered load.
+    """
+
+    def __init__(self, cfg, params, *, max_len: int, num_blocks: int,
+                 block_size: int = 8, max_batch: int = 8,
+                 buckets: Optional[Sequence[int]] = None,
+                 config: Optional[E.EngineConfig] = None,
+                 admission: str = "continuous",
+                 max_live_cost_s: Optional[float] = None,
+                 max_slots: int = 64, state_dtype=jnp.bfloat16):
+        if admission not in ("continuous", "drain"):
+            raise ValueError(f"unknown admission {admission!r}; expected "
+                             "'continuous' or 'drain'")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        from repro.serve import engine as serve_engine
+        from repro.serve.kv_pool import KVBlockPool, PoolExhausted
+        self._serve_engine = serve_engine
+        self._PoolExhausted = PoolExhausted
+        self.cfg = cfg
+        self.params = params
+        self.config = config if config is not None \
+            else E.EngineConfig(row_align=8)
+        self.admission = admission
+        self.max_batch = max_batch
+        self.max_live_cost_s = max_live_cost_s
+        if buckets is None:
+            buckets = []
+            b = 1
+            while b < max_batch:
+                buckets.append(b)
+                b *= 2
+            buckets.append(max_batch)
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if self.buckets[-1] != max_batch:
+            raise ValueError(f"buckets {self.buckets} must end at "
+                             f"max_batch={max_batch}")
+        self.pool = KVBlockPool(cfg, max_len=max_len, block_size=block_size,
+                                num_blocks=num_blocks, max_slots=max_slots,
+                                state_dtype=state_dtype)
+        self.layout = self.pool.layout
+        # analytic unit cost of one live request: a batch-1 paged decode
+        # step (attention/FFN GEMMs + the paged-gather reconstruction)
+        self.unit_step_plan = E.plan_network(
+            serve_engine.paged_decode_program(cfg, self.layout, 1),
+            self.config)
+        self.unit_step_s = self.unit_step_plan.total_latency_s
+        self._decode: Dict[int, E.CompiledNet] = {}
+        self._prefill: Dict[int, E.CompiledNet] = {}
+        self._waiting: List[GenTicket] = []
+        self._running: List[GenTicket] = []
+        self._next_rid = 0
+        # counters (totals + per-step history, for stats())
+        self._steps = 0
+        self._tokens_out = 0
+        self._fill_sum = 0.0
+        self._admitted = 0
+        self._evicted = 0
+        self._expired = 0
+        self._cancelled = 0
+        self._admit_history: List[int] = []
+        self._evict_history: List[int] = []
+        self._wall_s = 0.0
+
+    # -- compiled-program caches --------------------------------------------
+
+    def decode_compiled(self, bucket: int) -> E.CompiledNet:
+        """The paged decode step at `bucket` rows (pool arrays donated)."""
+        if bucket not in self._decode:
+            prog = self._serve_engine.paged_decode_program(
+                self.cfg, self.layout, bucket)
+            self._decode[bucket] = E.compile(prog, self.config,
+                                             donate_argnums=(1,))
+        return self._decode[bucket]
+
+    def prefill_compiled(self, seq: int) -> E.CompiledNet:
+        """Batch-1 prefill-ingest at exact prompt length `seq` (pool
+        arrays donated) — one jit entry per distinct length."""
+        if seq not in self._prefill:
+            prog = self._serve_engine.prefill_ingest_program(
+                self.cfg, self.layout, seq)
+            self._prefill[seq] = E.compile(prog, self.config,
+                                           donate_argnums=(1,))
+        return self._prefill[seq]
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], steps: int,
+               timeout_s: Optional[float] = None) -> GenTicket:
+        """Queue one greedy-generation request: `steps` tokens after
+        `prompt`. `timeout_s` is a wall-clock deadline relative to now;
+        past it the request is dropped (queued or mid-generation) and its
+        blocks return to the pool."""
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if steps < 1:
+            raise ValueError(f"steps must be >= 1, got {steps}")
+        total = len(prompt) + steps
+        if total > self.layout.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + steps ({steps}) exceeds "
+                f"max_len={self.layout.max_len}")
+        # guarantee forward progress: a request alone in the pool must fit
+        need = -(-total // self.layout.block_size)
+        if need > self.pool.allocator.num_blocks - 1:
+            raise ValueError(
+                f"request needs {need} blocks but the pool only has "
+                f"{self.pool.allocator.num_blocks - 1} usable ones")
+        now = time.perf_counter()
+        t = GenTicket(rid=self._next_rid, prompt=prompt, steps=steps,
+                      submit_s=now, context=prompt,
+                      deadline_s=None if timeout_s is None
+                      else now + timeout_s)
+        self._next_rid += 1
+        self._waiting.append(t)
+        return t
+
+    def cancel(self, ticket: GenTicket) -> bool:
+        """Cancel a queued or running request. A running request's KV
+        blocks return to the pool immediately (before the next step)."""
+        if ticket.status == "queued":
+            ticket.status = "cancelled"
+            ticket.done_s = time.perf_counter()
+            self._waiting = [t for t in self._waiting if t is not ticket]
+            self._cancelled += 1
+            return True
+        if ticket.status == "running":
+            self.pool.release(ticket.rid)
+            ticket.status = "cancelled"
+            ticket.done_s = time.perf_counter()
+            self._running = [t for t in self._running if t is not ticket]
+            self._cancelled += 1
+            return True
+        return False
+
+    def pending(self) -> int:
+        return len(self._waiting)
+
+    def running(self) -> int:
+        return len(self._running)
+
+    # -- internal step machinery --------------------------------------------
+
+    def _expire_deadlines(self) -> None:
+        now = time.perf_counter()
+
+        def past(t):
+            return t.deadline_s is not None and now > t.deadline_s
+
+        for t in [t for t in self._running if past(t)]:
+            self.pool.release(t.rid)
+            t.status = "expired"
+            t.done_s = now
+            self._expired += 1
+        self._running = [t for t in self._running if t.status == "running"]
+        for t in [t for t in self._waiting if past(t)]:
+            t.status = "expired"
+            t.done_s = now
+            self._expired += 1
+        self._waiting = [t for t in self._waiting if t.status == "queued"]
+
+    def _can_admit(self, t: GenTicket) -> bool:
+        seq = len(t.context)
+        # blocks for the whole prompt plus the next decode write
+        need = seq // self.layout.block_size + 1
+        if self.pool.allocator.free_blocks < need:
+            return False
+        if not self.pool._free_slots:
+            return False
+        if self.max_live_cost_s is not None and \
+                (len(self._running) + 1) * self.unit_step_s \
+                > self.max_live_cost_s:
+            return False
+        return True
+
+    def _admit(self, t: GenTicket) -> None:
+        """Prefill-ingest `t` into the pool and join the running set."""
+        seq = len(t.context)
+        self.pool.register(t.rid)
+        self.pool.ensure(t.rid, seq)    # prompt blocks + next decode write
+        pre = self.prefill_compiled(seq)
+        table_row = jnp.asarray(self.pool.allocator.tables[t.rid], jnp.int32)
+        slot = jnp.int32(self.pool._slot_of[t.rid])
+        toks = jnp.asarray([t.context], jnp.int32)
+        tok, self.pool.arrays = pre.apply(self.params, self.pool.arrays,
+                                          table_row, slot, toks)
+        t.tokens.append(int(tok[0]))
+        t.pos = seq
+        t.status = "running"
+        self._running.append(t)
+        self._admitted += 1
+
+    def _preempt(self, t: GenTicket) -> None:
+        """Evict a running request: free its blocks and requeue it at the
+        front. Its generated-so-far tokens fold into `context`, so on
+        re-admission one prefill rebuilds the cache and emits the next
+        token (the module-docstring parity carve-out)."""
+        self.pool.release(t.rid)
+        t.context = t.context + tuple(t.tokens[len(t.context)
+                                               - len(t.prompt):])
+        t.status = "queued"
+        t.preemptions += 1
+        self._running = [r for r in self._running if r is not t]
+        self._waiting.insert(0, t)
+        self._evicted += 1
+
+    def _finish(self, t: GenTicket) -> None:
+        self.pool.release(t.rid)
+        t.status = "done"
+        t.done_s = time.perf_counter()
+
+    def _bucket_for(self, k: int) -> int:
+        for b in self.buckets:
+            if b >= k:
+                return b
+        return self.buckets[-1]
+
+    # -- the per-step loop ---------------------------------------------------
+
+    def step(self) -> List[GenTicket]:
+        """One scheduler step: expire deadlines, admit from the queue
+        (continuous: whenever a batch row and pool capacity are free;
+        drain: only once the running set empties), ensure every running
+        row's next block (preempting youngest-first on exhaustion), run
+        one batched paged decode step, retire finished requests. Returns
+        the tickets that finished this step."""
+        t0 = time.perf_counter()
+        self._expire_deadlines()
+
+        admitted_now = 0
+        finished: List[GenTicket] = []
+        if self.admission == "continuous" or not self._running:
+            while (self._waiting and len(self._running) < self.max_batch
+                   and self._can_admit(self._waiting[0])):
+                t = self._waiting.pop(0)
+                self._admit(t)
+                admitted_now += 1
+                if len(t.tokens) >= t.steps:
+                    # finished at prefill: never occupies a decode row
+                    self._finish(t)
+                    self._running = [r for r in self._running if r is not t]
+                    finished.append(t)
+        self._admit_history.append(admitted_now)
+        evicted_now = 0
+
+        if not self._running:
+            self._evict_history.append(evicted_now)
+            self._wall_s += time.perf_counter() - t0
+            return finished
+
+        # grow each running row's table to cover its next write; on
+        # exhaustion evict the youngest admit until the older ones fit
+        i = 0
+        while i < len(self._running):
+            t = self._running[i]
+            try:
+                self.pool.ensure(t.rid, t.pos)
+                i += 1
+            except self._PoolExhausted:
+                victim = self._running[-1]
+                if victim is t and len(self._running) == 1:
+                    raise RuntimeError(
+                        "single running request exhausted the pool — "
+                        "impossible when submit()'s whole-request fit "
+                        "check passed")  # pragma: no cover
+                self._preempt(victim)
+                evicted_now += 1
+                if victim is t:
+                    break
+        self._evict_history.append(evicted_now)
+
+        k = len(self._running)
+        if k:
+            bucket = self._bucket_for(k)
+            rids = [t.rid for t in self._running]
+            tables = self.pool.table_rows(rids, bucket)
+            slots = self.pool.slot_rows(rids, bucket)
+            last = [t.tokens[-1] for t in self._running]
+            toks = jnp.asarray(last + [0] * (bucket - k),
+                               jnp.int32)[:, None]
+            pos = jnp.asarray([t.pos for t in self._running]
+                              + [0] * (bucket - k), jnp.int32)
+            dec = self.decode_compiled(bucket)
+            tok, self.pool.arrays = dec.apply(self.params, self.pool.arrays,
+                                              tables, slots, toks, pos)
+            tok = jax.device_get(tok)
+            self._steps += 1
+            self._tokens_out += k
+            self._fill_sum += k / bucket
+            for i, t in enumerate(self._running):
+                t.tokens.append(int(tok[i]))
+                t.pos += 1
+            for t in [t for t in self._running
+                      if len(t.tokens) >= t.steps]:
+                self._finish(t)
+                finished.append(t)
+            self._running = [t for t in self._running
+                             if t.status == "running"]
+        self._wall_s += time.perf_counter() - t0
+        return finished
+
+    def run(self) -> List[GenTicket]:
+        """Serve until queue and batch are empty; finished tickets in
+        completion order."""
+        done: List[GenTicket] = []
+        while self._waiting or self._running:
+            before = (len(self._waiting), len(self._running),
+                      self._tokens_out, self._admitted,
+                      self._expired, self._cancelled)
+            done.extend(self.step())
+            after = (len(self._waiting), len(self._running),
+                     self._tokens_out, self._admitted,
+                     self._expired, self._cancelled)
+            if before == after and self._waiting and not self._running:
+                raise RuntimeError(
+                    f"no progress: {len(self._waiting)} waiting but none "
+                    "admittable (pool or live-cost budget too small for "
+                    "the head request)")
+        return done
+
+    # -- stats ---------------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving counters plus pool occupancy. `decode_fill` is the mean
+        real-rows / bucket-rows ratio over decode steps (the quantity
+        drain-mode scheduling strands); `pool` carries the block-pool
+        snapshot (occupancy, free-block low-water mark); the
+        `*_per_step` lists hold the per-step admitted/evicted counts."""
+        return {
+            "admission": self.admission,
+            "max_batch": self.max_batch,
+            "buckets": list(self.buckets),
+            "steps": self._steps,
+            "tokens_out": self._tokens_out,
+            "decode_fill": (self._fill_sum / self._steps
+                            if self._steps else 0.0),
+            "admitted": self._admitted,
+            "evicted": self._evicted,
+            "expired": self._expired,
+            "cancelled": self._cancelled,
+            "admitted_per_step": list(self._admit_history),
+            "evicted_per_step": list(self._evict_history),
+            "pending": len(self._waiting),
+            "running": len(self._running),
+            "dispatch_wall_s": self._wall_s,
+            "throughput_tps": (self._tokens_out / self._wall_s
+                               if self._wall_s else 0.0),
+            "unit_step_s": self.unit_step_s,
+            "unit_step_gather_s": self.unit_step_plan.gather_latency_s,
+            "compiled_decode_buckets": sorted(self._decode),
+            "compiled_prefill_lens": sorted(self._prefill),
+            "pool": self.pool.snapshot(),
+        }

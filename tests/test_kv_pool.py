@@ -1,0 +1,227 @@
+"""KV block pool: allocator edges, layout round-trips, gather kernel.
+
+Unconditional tier-1 coverage for the paged serving substrate (the
+hypothesis property suite lives in test_kv_pool_properties.py, skipped
+when the dependency is absent like the other property modules):
+
+  * `BlockAllocator` — validation, incremental `ensure`, LIFO (cache-warm)
+    block reuse, clean exhaustion;
+  * `PagedLayout` — pushing a real prefilled decode state through
+    scatter_prefill then gather reproduces it bitwise; scatter_step
+    touches exactly one (block, offset) per paged leaf;
+  * `KVBlockPool` — lifecycle + snapshot accounting, slot exhaustion;
+  * `paged_gather` — the Pallas scalar-prefetch kernel is bitwise equal
+    to the XLA `take` reference and backend-invariant through
+    `engine.paged_gather` (both are pure memory moves).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.kernels import ops
+from repro.models import transformer as T
+from repro.serve.kv_pool import (BlockAllocator, KVBlockPool, PagedLayout,
+                                 PoolExhausted)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestAllocator:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BlockAllocator(1, 4)
+        with pytest.raises(ValueError):
+            BlockAllocator(4, 0)
+        alloc = BlockAllocator(4, 2)
+        alloc.register(0)
+        with pytest.raises(ValueError):
+            alloc.register(0)
+
+    def test_ensure_is_incremental(self):
+        alloc = BlockAllocator(8, 4)
+        alloc.register(0)
+        assert len(alloc.ensure(0, 0, 4)) == 1      # covers pos 0
+        assert alloc.ensure(0, 3, 4) == []          # same block
+        assert len(alloc.ensure(0, 11, 4)) == 2     # blocks 1 and 2
+        assert alloc.live_blocks == 3
+        assert alloc.free_blocks + alloc.live_blocks == 7
+
+    def test_lifo_reuse(self):
+        alloc = BlockAllocator(8, 2)
+        alloc.register(0)
+        b = alloc.alloc_block(0, 0)
+        alloc.release(0)
+        alloc.register(1)
+        assert alloc.alloc_block(1, 0) == b         # warm block first
+
+    def test_clean_exhaustion_and_double_free(self):
+        alloc = BlockAllocator(4, 8)
+        alloc.register(0)
+        for idx in range(3):
+            assert alloc.alloc_block(0, idx) != 0   # block 0 reserved
+        before = (alloc.free_blocks, list(alloc.tables[0]))
+        with pytest.raises(PoolExhausted):
+            alloc.alloc_block(0, 3)
+        assert (alloc.free_blocks, list(alloc.tables[0])) == before
+        assert alloc.low_water == 0
+        assert alloc.release(0) and alloc.free_blocks == 3
+        with pytest.raises(KeyError):
+            alloc.release(0)
+
+
+# ---------------------------------------------------------------------------
+# PagedLayout round-trip on the real model state
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def layout(smollm_reduced):
+    return PagedLayout.build(smollm_reduced, max_len=32, block_size=8,
+                             num_blocks=16, state_dtype=jnp.float32)
+
+
+def _spec_leaves(layout):
+    return jax.tree_util.tree_leaves(
+        layout.specs, is_leaf=lambda x: hasattr(x, "paged"))
+
+
+class TestPagedLayout:
+    def test_build_classifies_leaves(self, layout):
+        assert any(s.paged for s in _spec_leaves(layout))  # attn caches page
+        assert layout.blocks_per_req == 4
+
+    def test_block_size_must_divide(self, smollm_reduced):
+        with pytest.raises(ValueError, match="multiple"):
+            PagedLayout.build(smollm_reduced, max_len=30, block_size=8,
+                              num_blocks=8)
+
+    def test_scatter_gather_roundtrip_bitwise(self, smollm_reduced,
+                                              smollm_params, layout):
+        """A prefilled dense state pushed through scatter_prefill then
+        gather comes back bitwise identical on the live prefix (and on
+        the written tail of the last block, which carries the dense
+        path's zeros)."""
+        seq = 5                                    # not block-aligned
+        toks = (jnp.arange(seq, dtype=jnp.int32)[None, :] % 50) + 1
+        _, state = T.prefill(smollm_reduced, smollm_params,
+                             {"tokens": toks}, layout.max_len)
+
+        arrays = layout.init_arrays()
+        table_row = jnp.asarray([3, 0, 0, 0], jnp.int32)
+        arrays = layout.scatter_prefill(arrays, state, table_row,
+                                        jnp.int32(2), n_blocks=1)
+        tables = jnp.asarray([[3, 0, 0, 0]], jnp.int32)
+        got = layout.gather(arrays, tables, jnp.asarray([2], jnp.int32))
+
+        for g, want, sp in zip(jax.tree_util.tree_leaves(got),
+                               jax.tree_util.tree_leaves(state),
+                               _spec_leaves(layout)):
+            if sp.paged:
+                sl = [slice(None)] * want.ndim
+                sl[sp.len_ax] = slice(0, layout.block_size)
+                np.testing.assert_array_equal(np.asarray(g[tuple(sl)]),
+                                              np.asarray(want[tuple(sl)]))
+            else:
+                np.testing.assert_array_equal(np.asarray(g),
+                                              np.asarray(want))
+
+    def test_scatter_step_writes_one_position(self, layout):
+        arrays = layout.init_arrays()
+        tables = jnp.asarray([[1, 2, 0, 0]], jnp.int32)
+        slots = jnp.asarray([1], jnp.int32)
+        pos = jnp.asarray([9], jnp.int32)          # block idx 1, offset 1
+        ones = jax.tree_util.tree_map(
+            lambda a: jnp.ones(a.shape, a.dtype), layout.template)
+        arrays2 = layout.scatter_step(arrays, ones, tables, slots, pos)
+        for arr, sp in zip(jax.tree_util.tree_leaves(arrays2),
+                           _spec_leaves(layout)):
+            if sp.paged:
+                block = np.asarray(arr[2])         # table[1] == block 2
+                assert (block[1] == 1.0).all()     # offset 1 written
+                assert (block[0] == 0.0).all()     # offset 0 untouched
+                assert (np.asarray(arr[1]) == 0.0).all()  # block 1 clean
+
+
+# ---------------------------------------------------------------------------
+# KVBlockPool composition + snapshot accounting
+# ---------------------------------------------------------------------------
+
+class TestKVBlockPool:
+    def test_lifecycle_and_snapshot(self, smollm_reduced):
+        pool = KVBlockPool(smollm_reduced, max_len=32, block_size=8,
+                           num_blocks=10, max_slots=8)
+        pool.register(0)
+        pool.register(1)
+        pool.ensure(0, 10)                         # blocks 0, 1
+        pool.ensure(1, 3)                          # block 0
+        snap = pool.snapshot()
+        assert snap["live_blocks"] == 3
+        assert snap["free_blocks"] == 6
+        assert snap["live_requests"] == 2
+        assert snap["occupancy"] == pytest.approx(3 / 9)
+        assert snap["free_low_water"] == 6
+        assert snap["free_slots"] == 5             # slot 0 reserved
+
+        assert pool.table_rows([0, 1], 4).shape == (4, 4)
+        assert (np.asarray(pool.table_rows([0, 1], 4))[2:] == 0).all()
+        assert np.asarray(pool.slot_rows([0, 1], 3))[2] == 0
+
+        pool.release(0)
+        snap = pool.snapshot()
+        assert snap["live_blocks"] == 1 and snap["free_blocks"] == 8
+        assert snap["free_low_water"] == 6         # low-water sticks
+        with pytest.raises(KeyError):
+            pool.release(0)
+
+    def test_slot_exhaustion(self, smollm_reduced):
+        pool = KVBlockPool(smollm_reduced, max_len=16, block_size=8,
+                           num_blocks=32, max_slots=3)
+        pool.register(0)
+        pool.register(1)                           # slots 1, 2 now taken
+        with pytest.raises(PoolExhausted, match="slot"):
+            pool.register(2)
+
+
+# ---------------------------------------------------------------------------
+# paged_gather kernel parity
+# ---------------------------------------------------------------------------
+
+class TestPagedGather:
+    @pytest.mark.parametrize("nb,bs,feat,b,npr", [
+        (10, 4, (3, 2, 5), 2, 3), (16, 8, (4, 16), 3, 4),
+        (5, 2, (), 1, 2), (12, 8, (7,), 4, 1)])
+    def test_vs_take(self, nb, bs, feat, b, npr):
+        key = jax.random.PRNGKey(nb * 31 + b)
+        pool = jax.random.normal(key, (nb, bs) + feat,
+                                 jnp.float32).astype(jnp.bfloat16)
+        table = jax.random.randint(jax.random.PRNGKey(1), (b, npr), 0, nb,
+                                   dtype=jnp.int32)
+        got = ops.paged_gather(pool, table)
+        want = jnp.take(pool, table, axis=0).reshape(
+            (b, npr * bs) + feat)
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+
+    def test_engine_backends_agree(self):
+        """engine.paged_gather is bitwise backend-invariant (pallas vs
+        xla vs ref), so a paged cache reconstruction never depends on
+        backend selection."""
+        pool = jax.random.normal(jax.random.PRNGKey(3), (9, 4, 2, 6),
+                                 jnp.float32)
+        table = jnp.asarray([[1, 0, 8], [3, 3, 2]], jnp.int32)
+        outs = []
+        for backend in ("xla", "pallas", "ref"):
+            with E.using_config(E.EngineConfig(backend=backend,
+                                               interpret=True)):
+                outs.append(np.asarray(E.paged_gather(pool, table)))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+    def test_planned_as_memory_move(self):
+        """plan_gather books zero MACs and words-proportional cycles."""
+        plan = E.plan_gather((16, 8, 4), (2, 3), "xla")
+        assert plan.kind == "gather" and plan.macs == 0
+        words = 2 * 3 * 8 * 4
+        assert plan.ma_words == 2 * words
+        assert plan.cycles == -(-words // 192)
