@@ -507,6 +507,125 @@ def emit_serve_json(path: str, smoke: bool, emit=print) -> None:
     print(f"# wrote {path}", file=sys.stderr)
 
 
+_PARALLEL_WORKER = """
+import json, sys, time
+import jax, jax.numpy as jnp
+jax.config.update("jax_platform_name", "cpu")
+from repro import engine as E
+from repro.configs.base import reduced
+from repro.models import transformer as T
+from repro.serve import engine as SE
+from repro.serve.scheduler import Scheduler, latency_percentiles
+
+mode = json.loads(sys.argv[1])
+cfg = reduced("smollm_135m")
+params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+seq, n_req, max_batch, repeats = 32, 16, 8, 5
+prog = SE.prefill_program(cfg, batch=1, seq=seq, logits_only=True)
+
+mesh = None
+if mode["data"] * mode["model"] > 1:
+    from repro.engine.parallel import ParallelConfig, make_mesh
+    pcfg = ParallelConfig(data=mode["data"], model=mode["model"],
+                          policy=mode["policy"])
+    scfg = E.EngineConfig(row_align=8, parallel=pcfg)
+    mesh = make_mesh(pcfg)
+else:
+    scfg = E.EngineConfig(row_align=8)
+
+def requests():
+    return [{"tokens": jax.random.randint(jax.random.PRNGKey(i),
+                                          (1, seq), 0, cfg.vocab_size)}
+            for i in range(n_req)]
+
+sched = Scheduler(config=scfg, max_batch=max_batch, mesh=mesh)
+sched.register("score", prog, shared_args=(params,))
+sched.warmup("score")                   # every (bucket, replica) pre-paid
+wall, tickets = float("inf"), []
+for _ in range(repeats):
+    tickets = [sched.submit("score", r) for r in requests()]
+    t0 = time.perf_counter()
+    sched.drain()
+    wall = min(wall, time.perf_counter() - t0)
+print("RESULT", json.dumps({
+    "devices": jax.device_count(),
+    "replicas": sched.stats()["replicas"],
+    "wall_s": wall,
+    "throughput_rps": n_req / wall,
+    **latency_percentiles(tickets, (50, 95, 99)),
+}))
+"""
+
+# mode name -> (forced host devices, data, model, per-op policy)
+PARALLEL_MODES = {
+    "single":     {"devices": 1, "data": 1, "model": 1, "policy": "auto"},
+    "replicated": {"devices": 8, "data": 8, "model": 1, "policy": "auto"},
+    "sharded":    {"devices": 8, "data": 2, "model": 4, "policy": "auto"},
+}
+
+
+def bench_serve_parallel(smoke: bool) -> dict:
+    """Scheduler throughput on 1 vs 8 host devices, replica-spread vs
+    sharded vs single-device — the smoke prefill-scoring workload of
+    `bench_serve`, min-of-5 drains per mode.
+
+    Each mode runs in its own subprocess because jax pins the device count
+    at first init: `XLA_FLAGS=--xla_force_host_platform_device_count`
+    fakes the devices by splitting the host CPU, so all 8 "devices" share
+    one socket's FLOPs. The interesting ratios are therefore *overhead*
+    ratios (dispatch, collectives, shard_map) rather than real scaling —
+    the CI gate only asserts the parallel modes stay within a conservative
+    factor of single-device throughput, not that they beat it.
+    """
+    import os
+    import subprocess
+    from pathlib import Path
+
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    modes = {}
+    for name, m in PARALLEL_MODES.items():
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count"
+                              f"={m['devices']}")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-c", _PARALLEL_WORKER, json.dumps(m)],
+            env=env, capture_output=True, text=True, timeout=1200)
+        if out.returncode != 0:
+            raise RuntimeError(f"parallel bench mode {name!r} failed:\n"
+                               + out.stderr[-4000:])
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        modes[name] = {**m, **json.loads(line[len("RESULT "):])}
+
+    single = modes["single"]["throughput_rps"]
+    return {
+        "bench": "serve_parallel",
+        "workload": {"program": "smollm-prefill32-logits", "requests": 16,
+                     "max_batch": 8, "repeats": 5},
+        "modes": modes,
+        "replicated_vs_single": modes["replicated"]["throughput_rps"]
+        / single,
+        "sharded_vs_single": modes["sharded"]["throughput_rps"] / single,
+    }
+
+
+def emit_parallel_json(path: str, smoke: bool, emit=print) -> None:
+    result = bench_serve_parallel(smoke)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    n_req = result["workload"]["requests"]
+    for name, m in result["modes"].items():
+        emit(f"serve_parallel/{name},{m['wall_s']/n_req*1e6:.0f},"
+             f"rps={m['throughput_rps']:.1f};devices={m['devices']};"
+             f"replicas={m['replicas']};p95_ms={m['p95_ms']:.2f}")
+    emit(f"serve_parallel/scaling,0,replicated_vs_single="
+         f"{result['replicated_vs_single']:.2f}x;sharded_vs_single="
+         f"{result['sharded_vs_single']:.2f}x")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -520,6 +639,9 @@ def main(argv=None) -> None:
                          "output path")
     ap.add_argument("--tuning-out", default="BENCH_tuning.json",
                     help="machine-readable kernel-tuning bench output path")
+    ap.add_argument("--parallel-out", default="BENCH_serve_parallel.json",
+                    help="machine-readable multi-device serve bench "
+                         "output path")
     ap.add_argument("--retune", action="store_true",
                     help="autotune the tuning-bench workloads first and "
                          "refresh .tuning/<device_kind>.json")
@@ -547,6 +669,7 @@ def main(argv=None) -> None:
     emit_serve_json(args.serve_out, args.smoke)
     emit_continuous_json(args.continuous_out, args.smoke)
     emit_tuning_json(args.tuning_out, args.smoke, args.retune)
+    emit_parallel_json(args.parallel_out, args.smoke)
 
     if not args.smoke:
         from benchmarks import kernel_bench

@@ -24,6 +24,13 @@ MMIE_CONV_FREQ_HZ = 200e6
 MMIE_FC_FREQ_HZ = 40e6
 MMIE_WORD_BYTES = 2          # 16-bit fixed point
 MMIE_SCRATCH_ENTRIES = 64    # L = 64 24-bit partial sums per PE
+# Multi-chip extension (engine/parallel.py): ring-collective link rate
+# between MMIE chips, in 16-bit words per cycle per neighbor link at the
+# conv (memory-system) clock. One word/cycle at 200 MHz = 400 MB/s — an
+# embedded chip-to-chip NoC, deliberately slow relative to the PE array so
+# the shard-vs-replicate policy has a real trade-off to price: sharding a
+# layer only pays when the compute saved outweighs the words moved.
+MMIE_LINK_WORDS_PER_CYCLE = 1
 
 # TPU v5e target constants (roofline; see EXPERIMENTS.md §Roofline).
 TPU_PEAK_FLOPS_BF16 = 197e12     # per chip

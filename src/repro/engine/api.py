@@ -281,10 +281,21 @@ def einsum(spec: str, x: jax.Array, w: jax.Array, *,
     if pad:
         x = jnp.concatenate(
             [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-    out = dispatch.get_backend(plan.backend).einsum(
-        spec, x, w, plan, structure,
-        accum_dtype=_resolve_accum(accum_dtype, "einsum"),
-        interpret=_interp(interpret), bias=bias, act=act)
+    if plan.shard is not None and plan.shard.collective != "none":
+        # a sharded plan only ever arrives via replay inside a
+        # shard_mapped CompiledNet.apply (engine.compile pins decisions
+        # exclusively when a mesh backs them), so the collective axis is
+        # in scope here
+        from repro.engine import parallel as _parlib
+        out = _parlib.sharded_einsum(
+            dispatch.get_backend(plan.backend), spec, x, w, plan, structure,
+            accum_dtype=_resolve_accum(accum_dtype, "einsum"),
+            interpret=_interp(interpret), bias=bias, act=act)
+    else:
+        out = dispatch.get_backend(plan.backend).einsum(
+            spec, x, w, plan, structure,
+            accum_dtype=_resolve_accum(accum_dtype, "einsum"),
+            interpret=_interp(interpret), bias=bias, act=act)
     if pad:
         ax = structure.out_labels.index(structure.x_labels[0])
         out = jax.lax.slice_in_dim(out, 0, op.x_shape[0], axis=ax)

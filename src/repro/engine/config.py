@@ -27,6 +27,8 @@ import dataclasses
 import threading
 from typing import Iterator, List, Optional
 
+from repro.engine.parallel import ParallelConfig
+
 _POLICIES = ("fixed", "auto")
 _TUNING_MODES = ("off", "cached", "autotune")
 
@@ -66,6 +68,15 @@ class EngineConfig:
                 conv keys the batch dim), so batched and batch-1 execution
                 always share one tile config — the accumulation-order
                 guarantee the scheduler's bitwise parity contract needs.
+    parallel  — None keeps single-device execution. A frozen
+                `engine.parallel.ParallelConfig` makes `engine.compile`
+                emit a `shard_map`ped `CompiledNet.apply` over a
+                (data, model) mesh with a per-op replicate / shard-K /
+                shard-N placement chosen from the analytic plan (the
+                device-level twin of `policy="auto"`), and lets the
+                serving schedulers spread replicas over the data axis.
+                With the default `exact_only=True` policy, sharded
+                outputs stay bitwise identical to single-device ones.
     """
 
     backend: str = "xla"
@@ -74,8 +85,14 @@ class EngineConfig:
     policy: str = "fixed"
     row_align: Optional[int] = None
     tuning: str = "off"
+    parallel: Optional[ParallelConfig] = None
 
     def __post_init__(self) -> None:
+        if self.parallel is not None and not isinstance(self.parallel,
+                                                        ParallelConfig):
+            raise ValueError(
+                "parallel must be None or an engine.parallel.ParallelConfig; "
+                f"got {self.parallel!r}")
         if self.policy not in _POLICIES:
             raise ValueError(
                 f"unknown backend-selection policy {self.policy!r}; "

@@ -104,6 +104,58 @@ def auto_backend(op: OpSpec, fallback: str = "xla") -> str:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardDecision:
+    """How one op is split across the mesh's tensor-parallel ("model") axis.
+
+    The per-op analogue of the pallas-vs-xla backend choice, for devices
+    instead of kernels (engine/parallel.py owns the policy):
+
+      * ``"replicate"`` — every device runs the full op (no collective);
+      * ``"shard_k"``   — the contraction (K) dim is split; each device
+        produces a full-shape partial sum, combined by an all-reduce;
+      * ``"shard_n"``   — the weight-free output (N) dim is split; each
+        device produces a column slice, combined by an all-gather.
+
+    `words` is the op's *global* output size in 16-bit words — what the
+    combining collective moves. Wire traffic follows the standard ring
+    formulas: an all-gather moves (w-1)/w of the result per device, an
+    all-reduce twice that (reduce-scatter + all-gather).
+    """
+
+    strategy: str                   # "replicate" | "shard_k" | "shard_n"
+    ways: int                       # size of the mesh axis ("model")
+    axis: str = "model"             # mesh axis name the collective runs over
+    words: int = 0                  # global output words (0 for replicate)
+
+    def __post_init__(self) -> None:
+        if self.strategy not in ("replicate", "shard_k", "shard_n"):
+            raise ValueError(f"unknown shard strategy {self.strategy!r}")
+        if self.ways < 1:
+            raise ValueError(f"ways must be >= 1, got {self.ways}")
+
+    @property
+    def collective(self) -> str:
+        if self.ways <= 1 or self.strategy == "replicate":
+            return "none"
+        return "all_reduce" if self.strategy == "shard_k" else "all_gather"
+
+    @property
+    def wire_words(self) -> int:
+        """Ring-collective wire traffic per device, in 16-bit words."""
+        if self.collective == "none":
+            return 0
+        passes = 2 if self.collective == "all_reduce" else 1
+        return -(-passes * (self.ways - 1) * self.words // self.ways)
+
+    @property
+    def collective_cycles(self) -> int:
+        """Link cycles (at the conv clock) the combining collective costs."""
+        if not self.wire_words:
+            return 0
+        return -(-self.wire_words // modes.MMIE_LINK_WORDS_PER_CYCLE)
+
+
+@dataclasses.dataclass(frozen=True)
 class EnginePlan:
     """Everything the engine decided about one op, from shapes alone."""
 
@@ -121,12 +173,31 @@ class EnginePlan:
     # never set it — a tuned plan is always a dataclasses.replace of a pure
     # analytic plan, so the plan caches stay tuning-agnostic.
     tile_config: Optional[Tuple[int, ...]] = None
+    # Multi-device placement pinned by engine.compile when the config
+    # carries a ParallelConfig (engine/parallel.py). Like tile_config, the
+    # lru-cached planners never set it — a sharded plan is always a
+    # dataclasses.replace of the pure single-device analytic plan, so the
+    # plan caches stay parallelism-agnostic and `cycles` / `macs` /
+    # `ma_words` keep their global (whole-op) meaning everywhere.
+    shard: Optional["ShardDecision"] = None
 
     @property
     def performance_efficiency(self) -> float:
         """Paper Fig. 5 metric: useful MACs over peak array MACs."""
         return self.macs / (modes.MMIE_NUM_PES * self.cycles) if self.cycles \
             else 0.0
+
+    @property
+    def exec_cycles(self) -> int:
+        """Cycles on the critical path of one device: `cycles / ways` for a
+        genuinely split op, the full `cycles` when replicated (every device
+        repeats the whole op) or unsharded. Collective cycles are booked
+        separately (`ShardDecision.collective_cycles`) — they run on the
+        link clock, not the PE array."""
+        if self.shard is None or self.shard.ways <= 1 \
+                or self.shard.strategy == "replicate":
+            return self.cycles
+        return -(-self.cycles // self.shard.ways)
 
 
 def _mode_for(w_f: int, s: int) -> modes.Mode:

@@ -33,6 +33,7 @@ import jax
 
 from repro.core import modes
 from repro.engine import api
+from repro.engine import parallel as parlib
 from repro.engine import tune as tunelib
 from repro.engine.config import EngineConfig, current_config, using_config
 from repro.engine.plan import (EnginePlan, OpSpec, auto_backend,
@@ -253,10 +254,60 @@ class NetworkPlan:
         clock — a pure data move never waits on the 40 MHz FC array."""
         return self.gather_cycles / modes.MMIE_CONV_FREQ_HZ
 
+    # -- multi-device placement (engine/parallel.py) -----------------------
+
+    @property
+    def shards(self) -> Tuple[Optional[Any], ...]:
+        """Per-op `ShardDecision`s, in plan order (None = unsharded plan)."""
+        return tuple(p.shard for p in self.plans)
+
+    @property
+    def collective_words(self) -> int:
+        """Ring-collective wire traffic (16-bit words) of every sharded op's
+        combine step — all-gathers for shard-N layers, all-reduces for
+        shard-K — folded into `total_latency_s` exactly like PR 6 folded
+        paged-gather costs."""
+        return sum(p.shard.wire_words for p in self.plans
+                   if p.shard is not None)
+
+    @property
+    def collective_cycles(self) -> int:
+        return sum(p.shard.collective_cycles for p in self.plans
+                   if p.shard is not None)
+
+    @property
+    def collective_latency_s(self) -> float:
+        """Inter-chip combine time, priced at the conv (memory-system)
+        clock over the `modes.MMIE_LINK_WORDS_PER_CYCLE` link."""
+        return self.collective_cycles / modes.MMIE_CONV_FREQ_HZ
+
+    # -- per-device execution cycles (== the global cycles when unsharded) --
+
+    @property
+    def conv_exec_cycles(self) -> int:
+        return sum(p.exec_cycles for p in self.conv_plans)
+
+    @property
+    def fc_exec_cycles(self) -> int:
+        return sum(p.exec_cycles for p in self.fc_plans)
+
+    @property
+    def gather_exec_cycles(self) -> int:
+        return sum(p.exec_cycles for p in self.gather_plans)
+
     @property
     def total_latency_s(self) -> float:
-        return self.conv_latency_s + self.fc_latency_s \
-            + self.gather_latency_s
+        """End-to-end analytic latency of one device's critical path:
+        per-device compute cycles (`exec_cycles` — equal to the global
+        cycles for every replicated or unsharded op, so this is numerically
+        unchanged from the single-device plan when no op shards) plus the
+        collective wire time. `conv/fc_latency_s` and `table4_row` stay on
+        global cycles — the paper's whole-network Table-4 goldens are
+        device-count-invariant."""
+        return (self.conv_exec_cycles / modes.MMIE_CONV_FREQ_HZ
+                + self.fc_exec_cycles / modes.MMIE_FC_FREQ_HZ
+                + self.gather_exec_cycles / modes.MMIE_CONV_FREQ_HZ
+                + self.collective_latency_s)
 
     # -- memory accesses ---------------------------------------------------
 
@@ -335,10 +386,14 @@ def _select_backend(op: OpSpec, cfg: EngineConfig) -> str:
 
 def plan_network(program: Program,
                  cfg: Optional[EngineConfig] = None) -> NetworkPlan:
-    """Plan every op of `program` under `cfg` (no execution, no arrays)."""
+    """Plan every op of `program` under `cfg` (no execution, no arrays).
+    With `cfg.parallel` set, every plan also carries its per-op
+    `ShardDecision` so the aggregate latencies price collectives."""
     cfg = current_config() if cfg is None else cfg
     return NetworkPlan(program.name, tuple(
-        plan_op(op, _select_backend(op, cfg)) for op in program.ops))
+        parlib.attach(op, plan_op(op, _select_backend(op, cfg)),
+                      cfg.parallel)
+        for op in program.ops))
 
 
 # ---------------------------------------------------------------------------
@@ -354,23 +409,41 @@ class CompiledNet:
               in the captured order. Shape-specialized like any compiled
               artifact: executing with shapes that change the op sequence
               raises (recompile instead).
+    .mesh   — the (data, model) device mesh `.apply` is `shard_map`ped
+              over, or None for single-device execution. Inputs enter
+              replicated; each op then follows its pinned `ShardDecision`
+              (slice + backend + collective for sharded GEMMs, the plain
+              backend call for replicated ops), so the body is one trace
+              shared by all devices and replay stays strict.
     """
 
     def __init__(self, program: Program, config: EngineConfig,
                  plan: NetworkPlan,
                  exec_pairs: Optional[Tuple[Tuple[OpSpec, EnginePlan], ...]],
-                 donate_argnums: Tuple[int, ...] = ()):
+                 donate_argnums: Tuple[int, ...] = (),
+                 mesh=None):
         self.program = program
         self.config = config
         self.plan = plan
         self.exec_pairs = exec_pairs
+        self.mesh = mesh
         self._jitted = (None if program.fn is None
                         else jax.jit(self._run,
                                      donate_argnums=donate_argnums))
 
-    def _run(self, *args):
+    def _replayed(self, *args):
         with using_config(self.config), api.replaying(self.exec_pairs):
             return self.program.fn(*args)
+
+    def _run(self, *args):
+        if self.mesh is None:
+            return self._replayed(*args)
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel.compat import shard_map_compat
+        body = shard_map_compat(self._replayed, mesh=self.mesh,
+                                in_specs=tuple(P() for _ in args),
+                                out_specs=P())
+        return body(*args)
 
     @property
     def cost(self) -> Dict[str, float]:
@@ -397,10 +470,18 @@ class CompiledNet:
         pairs = self.exec_pairs if self.exec_pairs is not None else ()
         return tuple(plan.tile_config for _, plan in pairs)
 
+    def shards(self) -> Tuple[str, ...]:
+        """Per-op shard strategies of the execution plan, in call order
+        ("replicate" for every op of an unsharded net)."""
+        pairs = self.exec_pairs if self.exec_pairs is not None else ()
+        return tuple("replicate" if plan.shard is None
+                     else plan.shard.strategy for _, plan in pairs)
+
 
 def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
             cfg: Optional[EngineConfig] = None, *,
-            donate_argnums: Tuple[int, ...] = ()) -> CompiledNet:
+            donate_argnums: Tuple[int, ...] = (),
+            mesh=None) -> CompiledNet:
     """Two-phase entry point: plan the whole network under `cfg`, return a
     `CompiledNet` with the analytic `NetworkPlan` and a jitted `.apply`.
 
@@ -418,15 +499,39 @@ def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
     `donate_argnums` is forwarded to `jax.jit` for `.apply`: a serving
     step that threads large mutable state (the paged KV pool) through the
     compiled net donates it instead of copying it every step.
+
+    Multi-device: with `cfg.parallel` set, `.apply` is `shard_map`ped over
+    a (data, model) mesh — `mesh` when given (e.g. one `data_groups`
+    submesh from a serving replica), else a fresh
+    `parallel.make_mesh(cfg.parallel)` — and every exec op carries its
+    pinned `ShardDecision`. Passing `mesh` without `cfg.parallel` is an
+    error: the mesh alone does not say how to split ops.
     """
     cfg = current_config() if cfg is None else cfg
+    pcfg = cfg.parallel
+    if mesh is not None and pcfg is None:
+        raise ValueError(
+            "compile(mesh=...) needs cfg.parallel (a ParallelConfig) to "
+            "decide per-op placements; a bare mesh says nothing about how "
+            "to split ops")
+    if pcfg is not None:
+        if mesh is None and pcfg.devices > 1:
+            mesh = parlib.make_mesh(pcfg)
+        if mesh is not None:
+            parlib.check_mesh(mesh, pcfg)
     net_plan = plan_network(program, cfg)
     exec_pairs = None
     if program.fn is not None:
         exec_ops = _capture_ops(program.fn, program.in_avals)
+        # shard decisions are pinned into the exec pairs only when a mesh
+        # actually backs them: a sharded plan executes collectives, which
+        # only exist inside the shard_mapped body
+        exec_pcfg = pcfg if mesh is not None else None
         exec_pairs = tuple(
-            (op, tunelib.attach(op, plan_op(op, _select_backend(op, cfg)),
-                                cfg, allow_autotune=True))
+            (op, parlib.attach(
+                op, tunelib.attach(op, plan_op(op, _select_backend(op, cfg)),
+                                   cfg, allow_autotune=True),
+                exec_pcfg))
             for op in exec_ops)
     return CompiledNet(program, cfg, net_plan, exec_pairs,
-                       donate_argnums=donate_argnums)
+                       donate_argnums=donate_argnums, mesh=mesh)

@@ -19,8 +19,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def snap_model(n_devices: int, model: int) -> int:
+    """Largest divisor of `n_devices` that is <= the requested `model`
+    extent (pure helper, unit-testable without touching jax devices)."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    model = max(1, min(int(model), n_devices))
+    while n_devices % model:
+        model -= 1
+    return model
+
+
 def make_host_mesh(model: int = 1):
-    """Tiny mesh over whatever devices exist (tests / examples)."""
+    """Tiny mesh over whatever devices exist (tests / examples).
+
+    `model` is snapped to the largest divisor of the device count at or
+    below the request, so every device always lands in the mesh — a
+    requested model=4 on a 6-device host yields a (2, 3) mesh over all 6
+    devices, not a (1, 4) mesh that silently drops two.
+    """
     n = len(jax.devices())
-    model = min(model, n)
+    model = snap_model(n, model)
     return jax.make_mesh((n // model, model), ("data", "model"))

@@ -2,6 +2,18 @@
 state. `build_serve_step` is what the decode_32k / long_500k dry-run cells
 lower (one new token against a seq_len cache), `build_prefill` is the
 prefill_32k cell (and the encoder forward for encoder-only archs).
+
+Two multi-device paths coexist here:
+
+  * `build_serve_step` / `build_prefill` shard *params and state* via
+    `parallel.sharding` rules and let XLA's SPMD partitioner place the
+    compute (the production dry-run path);
+  * the `*_program` builders below stay mesh-free — pass a mesh plus
+    `EngineConfig(parallel=ParallelConfig(...))` to `engine.compile` (or
+    `mesh=` on the serving schedulers) and the *plan* decides per layer
+    whether a GEMM replicates, shards its contraction (all-reduce) or its
+    output features (all-gather), priced by the same analytic cost model
+    that picks pallas-vs-xla (engine/parallel.py).
 """
 from __future__ import annotations
 

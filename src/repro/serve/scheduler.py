@@ -85,6 +85,7 @@ class Ticket:
     batch_index: int = -1           # row this request occupied in its batch
     batch_fill: int = 0             # real requests in the executed batch
     batch_bucket: int = 0           # padded bucket size the batch ran at
+    batch_replica: int = 0          # mesh data group the batch dispatched to
     done_s: float = 0.0             # completion timestamp (perf_counter)
 
     @property
@@ -107,8 +108,8 @@ class _Entry:
     request_avals: Tuple[Any, ...]  # want-trees for submit() validation
     out_axes: Any                   # per-leaf output batch axis (or -1)
     unit_plan: E.NetworkPlan
-    compiled: Dict[int, E.CompiledNet] = dataclasses.field(
-        default_factory=dict)
+    compiled: Dict[Tuple[int, int], E.CompiledNet] = dataclasses.field(
+        default_factory=dict)          # (bucket, replica) -> CompiledNet
     pack_fn: Any = None             # one jitted packer (jit re-specializes
                                     # per bucket via the input structure)
     unpack: Dict[int, Any] = dataclasses.field(default_factory=dict)
@@ -145,12 +146,25 @@ class Scheduler:
     max_queue_cost_s — admission budget: `submit` raises `AdmissionError`
                        once the queue's summed plan latency would pass it
                        (None = admit everything).
+    mesh             — None serves on the default device. A (data, model)
+                       mesh (with `config.parallel` set to match) spreads
+                       batches round-robin across the mesh's data groups:
+                       each (program, bucket) compiles one `CompiledNet`
+                       per (1, model) submesh (`engine.parallel.
+                       data_groups`), consecutive batches land on
+                       different replicas, and dispatches stop blocking
+                       per batch (`drain` syncs at the end) so replicas
+                       overlap. The bitwise parity contract is unchanged
+                       — replica placement never changes a result, and
+                       model-axis sharding is exact under the default
+                       `exact_only` policy (tests/test_parallel.py).
     """
 
     def __init__(self, config: Optional[E.EngineConfig] = None,
                  policy: str = "fifo", max_batch: int = 8,
                  buckets: Optional[Sequence[int]] = None,
-                 max_queue_cost_s: Optional[float] = None):
+                 max_queue_cost_s: Optional[float] = None,
+                 mesh: Optional[Any] = None):
         if policy not in _POLICIES:
             raise ValueError(f"unknown policy {policy!r}; expected one of "
                              f"{_POLICIES}")
@@ -158,6 +172,19 @@ class Scheduler:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.config = config if config is not None \
             else E.EngineConfig(row_align=8)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.engine import parallel as parlib
+            if self.config.parallel is None:
+                raise ValueError(
+                    "Scheduler(mesh=...) needs config.parallel (an "
+                    "engine.ParallelConfig) to say how ops split over the "
+                    "mesh's model axis")
+            parlib.check_mesh(mesh, self.config.parallel)
+            self._groups: Tuple[Any, ...] = parlib.data_groups(mesh)
+        else:
+            self._groups = (None,)
+        self._rr = 0                    # round-robin replica cursor
         self.policy = policy
         self.max_batch = max_batch
         if buckets is None:
@@ -243,13 +270,18 @@ class Scheduler:
         self._entries[name] = entry
         return entry
 
-    def compiled(self, name: str, bucket: int) -> E.CompiledNet:
-        """The (program, bucket) `CompiledNet` — built once, then cached."""
+    def compiled(self, name: str, bucket: int,
+                 replica: int = 0) -> E.CompiledNet:
+        """The (program, bucket, replica) `CompiledNet` — built once, then
+        cached. `replica` indexes the mesh's data groups (always 0 when the
+        scheduler runs without a mesh)."""
         entry = self._entries[name]
-        if bucket not in entry.compiled:
-            entry.compiled[bucket] = E.compile(
-                entry.program.with_batch(bucket), self.config)
-        return entry.compiled[bucket]
+        key = (bucket, replica)
+        if key not in entry.compiled:
+            entry.compiled[key] = E.compile(
+                entry.program.with_batch(bucket), self.config,
+                mesh=self._groups[replica])
+        return entry.compiled[key]
 
     def _pack_fn(self, entry: _Entry):
         """Jitted request packer: the batch's per-request arg tuples in,
@@ -294,22 +326,30 @@ class Scheduler:
         return unpack
 
     def _dispatch(self, entry: _Entry, bucket: int,
-                  per: Tuple[Tuple[Any, ...], ...]) -> Tuple[Any, ...]:
+                  per: Tuple[Tuple[Any, ...], ...],
+                  replica: Optional[int] = None) -> Tuple[Any, ...]:
         """The jitted batch path (pack -> shared-arg splice -> apply ->
         unpack), shared by `step` and `warmup` so the pre-paid traces are
-        exactly the serving traces."""
+        exactly the serving traces. With multiple mesh data groups the
+        batch lands on the round-robin replica and the call does NOT block
+        — consecutive batches overlap across replicas; `drain` syncs."""
+        if replica is None:
+            replica = self._rr % len(self._groups)
+            self._rr += 1
         packed = iter(self._pack_fn(entry)(per))
         args = [entry.shared[pos] if pos in entry.shared else next(packed)
                 for pos in range(len(entry.program.in_avals))]
-        out = self.compiled(entry.name, bucket).apply(*args)
+        out = self.compiled(entry.name, bucket, replica).apply(*args)
         results = self._unpack_fn(entry, bucket)(out)
-        jax.block_until_ready(results)
+        if len(self._groups) == 1:
+            jax.block_until_ready(results)
         return results
 
     def warmup(self, name: Optional[str] = None) -> None:
         """Pre-pay every bucket's jit cost before opening traffic: runs one
         zero-filled batch through the full `_dispatch` path for each
-        (program, bucket), so no real request stalls on XLA compilation."""
+        (program, bucket, replica), so no real request stalls on XLA
+        compilation."""
         for n in ([name] if name else list(self._entries)):
             entry = self._entries[n]
             zeros = tuple(
@@ -318,7 +358,9 @@ class Scheduler:
                     entry.program.in_avals[pos])
                 for pos in entry.batch_positions)
             for bucket in self.buckets:
-                self._dispatch(entry, bucket, (zeros,) * bucket)
+                for replica in range(len(self._groups)):
+                    jax.block_until_ready(self._dispatch(
+                        entry, bucket, (zeros,) * bucket, replica=replica))
 
     # -- admission ----------------------------------------------------------
 
@@ -428,7 +470,9 @@ class Scheduler:
         # (array references, no copies) so the jitted packer always sees
         # exactly `bucket` request tuples
         per = tuple(t.args for t in batch) + (batch[0].args,) * (bucket - k)
-        results = self._dispatch(entry, bucket, per)
+        replica = self._rr % len(self._groups)
+        self._rr += 1
+        results = self._dispatch(entry, bucket, per, replica=replica)
         wall = time.perf_counter() - t0
         self._wall_s += wall
         entry.batches += 1
@@ -442,6 +486,7 @@ class Scheduler:
             ticket.batch_index = i
             ticket.batch_fill = k
             ticket.batch_bucket = bucket
+            ticket.batch_replica = replica
             ticket.done_s = time.perf_counter()
             for plan in entry.unit_plan.plans:
                 ticket.ledger.record_plan(plan)
@@ -449,10 +494,14 @@ class Scheduler:
         return batch
 
     def drain(self) -> List[Ticket]:
-        """Serve until the queue is empty; tickets in completion order."""
+        """Serve until the queue is empty; tickets in completion order.
+        With replica spreading active, dispatches were issued without
+        blocking — the final sync here waits for every in-flight batch."""
         done: List[Ticket] = []
         while self._queue:
             done.extend(self.step())
+        if len(self._groups) > 1 and done:
+            jax.block_until_ready([t.result for t in done])
         return done
 
     # -- stats --------------------------------------------------------------
@@ -466,7 +515,7 @@ class Scheduler:
                 "occupancy": (e.served / (e.served + e.padded_slots)
                               if e.served else 0.0),
                 "unit_plan_latency_s": e.unit_plan.total_latency_s,
-                "compiled_buckets": sorted(e.compiled),
+                "compiled_buckets": sorted({b for b, _ in e.compiled}),
             }
             for n, e in self._entries.items()
         }
@@ -475,6 +524,7 @@ class Scheduler:
             "policy": self.policy,
             "max_batch": self.max_batch,
             "tuning": self.config.tuning,
+            "replicas": len(self._groups),
             "buckets": list(self.buckets),
             "served": served,
             "batches": sum(e.batches for e in self._entries.values()),
@@ -528,6 +578,7 @@ class GenTicket:
     status: str = "queued"
     pos: int = 0                    # next cache position to be written
     preemptions: int = 0
+    replica: int = 0                # mesh data group serving this request
     done_s: float = 0.0
 
     @property
@@ -586,7 +637,8 @@ class ContinuousScheduler:
                  config: Optional[E.EngineConfig] = None,
                  admission: str = "continuous",
                  max_live_cost_s: Optional[float] = None,
-                 max_slots: int = 64, state_dtype=jnp.bfloat16):
+                 max_slots: int = 64, state_dtype=jnp.bfloat16,
+                 mesh: Optional[Any] = None):
         if admission not in ("continuous", "drain"):
             raise ValueError(f"unknown admission {admission!r}; expected "
                              "'continuous' or 'drain'")
@@ -600,6 +652,20 @@ class ContinuousScheduler:
         self.params = params
         self.config = config if config is not None \
             else E.EngineConfig(row_align=8)
+        # a model-parallel mesh for every decode/prefill compile: this
+        # scheduler owns ONE replica (one paged pool) — spreading across
+        # data groups is ReplicaSpread's job, so the mesh here is expected
+        # to be a (1, model) group (or any mesh whose model axis matches
+        # config.parallel; the data axis is simply replicated over)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.engine import parallel as parlib
+            if self.config.parallel is None:
+                raise ValueError(
+                    "ContinuousScheduler(mesh=...) needs config.parallel "
+                    "(an engine.ParallelConfig) to say how ops split over "
+                    "the mesh's model axis")
+            parlib.check_mesh(mesh, self.config.parallel)
         self.admission = admission
         self.max_batch = max_batch
         self.max_live_cost_s = max_live_cost_s
@@ -649,7 +715,8 @@ class ContinuousScheduler:
             prog = self._serve_engine.paged_decode_program(
                 self.cfg, self.layout, bucket)
             self._decode[bucket] = E.compile(prog, self.config,
-                                             donate_argnums=(1,))
+                                             donate_argnums=(1,),
+                                             mesh=self.mesh)
         return self._decode[bucket]
 
     def prefill_compiled(self, seq: int) -> E.CompiledNet:
@@ -659,7 +726,8 @@ class ContinuousScheduler:
             prog = self._serve_engine.prefill_ingest_program(
                 self.cfg, self.layout, seq)
             self._prefill[seq] = E.compile(prog, self.config,
-                                           donate_argnums=(1,))
+                                           donate_argnums=(1,),
+                                           mesh=self.mesh)
         return self._prefill[seq]
 
     # -- request lifecycle --------------------------------------------------
@@ -930,4 +998,124 @@ class ContinuousScheduler:
             "compiled_decode_buckets": sorted(self._decode),
             "compiled_prefill_lens": sorted(self._prefill),
             "pool": self.pool.snapshot(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Replica spreading across mesh data-parallel groups
+# ---------------------------------------------------------------------------
+
+
+class ReplicaSpread:
+    """Data-parallel front over one `ContinuousScheduler` per mesh data
+    group.
+
+    `engine.data_groups` splits a (data, model) mesh into `data` submeshes
+    of shape (1, model); each gets its *own* `ContinuousScheduler` — its
+    own paged `KVBlockPool` (`num_blocks` is per replica), its own
+    compiled-bucket cache, its own admission state. KV pages never cross a
+    data group: a request's whole lifetime (prefill, every decode step)
+    stays on the replica `submit` routed it to, so tensor-parallel
+    collectives run inside one (1, model) group and no cross-group traffic
+    exists at all.
+
+    Routing is least-loaded: a new request goes to the replica with the
+    fewest pending + running requests (ties to the lowest index, so
+    placement is deterministic for a deterministic submit order).
+
+    The per-request bitwise parity contract is unchanged — each replica is
+    a plain `ContinuousScheduler`, and the shard-map parity contract
+    (tests/test_parallel.py) makes a (1, model) group's tokens identical
+    to a single device's — so *which* replica served a request never shows
+    in its tokens, only in `GenTicket.replica`.
+    """
+
+    def __init__(self, cfg, params, *, mesh,
+                 config: Optional[E.EngineConfig] = None, **kwargs):
+        from repro.engine import parallel as parlib
+        if config is None:
+            config = E.EngineConfig(row_align=8,
+                                    parallel=parlib.ParallelConfig())
+        if config.parallel is None:
+            raise ValueError(
+                "ReplicaSpread needs config.parallel (an "
+                "engine.ParallelConfig) describing the mesh's model axis")
+        parlib.check_mesh(mesh, config.parallel)
+        self.mesh = mesh
+        self.config = config
+        self.groups = parlib.data_groups(mesh)
+        self.replicas: Tuple[ContinuousScheduler, ...] = tuple(
+            ContinuousScheduler(cfg, params, config=config, mesh=g, **kwargs)
+            for g in self.groups)
+
+    def _load(self, r: ContinuousScheduler) -> int:
+        return r.pending() + r.running()
+
+    def submit(self, prompt: Sequence[int], steps: int,
+               timeout_s: Optional[float] = None) -> GenTicket:
+        """Route one request to the least-loaded replica and queue it
+        there; the returned ticket's `replica` records the placement."""
+        i = min(range(len(self.replicas)),
+                key=lambda j: self._load(self.replicas[j]))
+        t = self.replicas[i].submit(prompt, steps, timeout_s)
+        t.replica = i
+        return t
+
+    def cancel(self, ticket: GenTicket) -> bool:
+        return self.replicas[ticket.replica].cancel(ticket)
+
+    def pending(self) -> int:
+        return sum(r.pending() for r in self.replicas)
+
+    def running(self) -> int:
+        return sum(r.running() for r in self.replicas)
+
+    def step(self) -> List[GenTicket]:
+        """One scheduling step on every replica (each replica interleaves
+        its own prefills and runs one decode step); finished tickets from
+        all replicas, replica-major."""
+        done: List[GenTicket] = []
+        for r in self.replicas:
+            if r._waiting or r._running:
+                done.extend(r.step())
+        return done
+
+    def run(self) -> List[GenTicket]:
+        """Serve until every replica's queue and batch are empty."""
+        done: List[GenTicket] = []
+        while self.pending() or self.running():
+            before = (self.pending(), self.running(),
+                      sum(r._tokens_out for r in self.replicas),
+                      sum(r._expired + r._cancelled for r in self.replicas))
+            done.extend(self.step())
+            after = (self.pending(), self.running(),
+                     sum(r._tokens_out for r in self.replicas),
+                     sum(r._expired + r._cancelled for r in self.replicas))
+            if before == after and self.pending() and not self.running():
+                raise RuntimeError(
+                    f"no progress: {self.pending()} waiting but none "
+                    "admittable on any replica (per-replica pool or "
+                    "live-cost budget too small for the head request)")
+        return done
+
+    def stats(self) -> Dict[str, Any]:
+        """Aggregate counters plus each replica's full `stats()` dict."""
+        per = [r.stats() for r in self.replicas]
+        wall = sum(s["dispatch_wall_s"] for s in per)
+        tokens = sum(s["tokens_out"] for s in per)
+        return {
+            "replicas": len(self.replicas),
+            "tokens_out": tokens,
+            "steps": sum(s["steps"] for s in per),
+            "admitted": sum(s["admitted"] for s in per),
+            "evicted": sum(s["evicted"] for s in per),
+            "expired": sum(s["expired"] for s in per),
+            "cancelled": sum(s["cancelled"] for s in per),
+            "pending": self.pending(),
+            "running": self.running(),
+            # replicas step in sequence on one host process, so the
+            # aggregate wall is the sum of per-replica dispatch time
+            "dispatch_wall_s": wall,
+            "throughput_tps": tokens / wall if wall else 0.0,
+            "per_replica": per,
         }

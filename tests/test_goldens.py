@@ -59,3 +59,71 @@ def test_golden_matches_closed_form_analytics(net):
     assert _bits(want["fc_ms"]) == _bits(nc.fc_latency_s * 1e3)
     assert _bits(want["conv_eff"]) == _bits(nc.conv_perf_efficiency)
     assert _bits(want["fc_eff"]) == _bits(nc.fc_perf_efficiency)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device collective-cost goldens (engine.parallel)
+# ---------------------------------------------------------------------------
+#
+# Pinned under ParallelConfig(model=4): which layers the auto policy shards
+# and what the ring collectives cost. Regenerate (intentional cost-model
+# changes only):
+#
+#   PYTHONPATH=src python -c "
+#   import json
+#   from repro import engine as E
+#   from repro.engine.parallel import ParallelConfig
+#   from repro.models import cnn
+#   for net in ('alexnet', 'vgg16', 'resnet50'):
+#       cfg = E.EngineConfig(parallel=ParallelConfig(model=4))
+#       plan = E.plan_network(cnn.program(net), cfg)
+#       strategies = {}
+#       for s in plan.shards:
+#           strategies[s.strategy] = strategies.get(s.strategy, 0) + 1
+#       row = {'strategies': strategies,
+#              'collective_words': plan.collective_words,
+#              'collective_cycles': plan.collective_cycles,
+#              'collective_latency_ms': plan.collective_latency_s * 1e3,
+#              'total_latency_ms': plan.total_latency_s * 1e3}
+#       with open(f'tests/goldens/parallel4_{net}.json', 'w') as f:
+#           json.dump(row, f, indent=2, sort_keys=True); f.write('\\n')"
+
+
+def _parallel4_row(net):
+    from repro.engine.parallel import ParallelConfig
+    cfg = E.EngineConfig(parallel=ParallelConfig(model=4))
+    plan = E.plan_network(cnn.program(net), cfg)
+    strategies = {}
+    for s in plan.shards:
+        strategies[s.strategy] = strategies.get(s.strategy, 0) + 1
+    return {"strategies": strategies,
+            "collective_words": plan.collective_words,
+            "collective_cycles": plan.collective_cycles,
+            "collective_latency_ms": plan.collective_latency_s * 1e3,
+            "total_latency_ms": plan.total_latency_s * 1e3}
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_parallel_plan_matches_golden_bit_for_bit(net):
+    want = json.loads((GOLDENS / f"parallel4_{net}.json").read_text())
+    got = _parallel4_row(net)
+    assert set(got) == set(want)
+    for key in want:
+        assert _bits(got[key]) == _bits(want[key]), (
+            f"{net}.{key}: plan={got[key]!r} golden={want[key]!r} — the "
+            "collective cost model drifted from the checked-in golden")
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_table4_row_is_device_count_invariant(net):
+    # the paper's Table-4 aggregates are *global* work (cycles, MACs,
+    # efficiency): planning the same net for a 4-way mesh must not move a
+    # single bit of them — only total_latency_s reflects the mesh
+    from repro.engine.parallel import ParallelConfig
+    base = E.plan_network(cnn.program(net), E.EngineConfig()).table4_row()
+    par = E.plan_network(
+        cnn.program(net),
+        E.EngineConfig(parallel=ParallelConfig(model=4))).table4_row()
+    assert set(base) == set(par)
+    for key in base:
+        assert _bits(base[key]) == _bits(par[key]), (net, key)

@@ -131,3 +131,72 @@ class TestValueSemantics:
         b = E.plan_network(cnn.program("alexnet", batch=batch),
                            E.EngineConfig())
         assert a == b and hash(a) == hash(b)
+
+
+class TestShardDecisionProperties:
+    """engine.parallel invariants over random GEMM geometries and mesh
+    extents: collective accounting is consistent, per-device exec cycles
+    never exceed global cycles, and a 1-way mesh is a strict no-op."""
+
+    gemm = st.tuples(st.integers(1, 32),        # m (rows)
+                     st.integers(1, 256),       # k (contract)
+                     st.integers(1, 256))       # n (out features)
+    ways = st.integers(1, 8)
+    policy = st.sampled_from(["auto", "replicate", "shard_k", "shard_n"])
+
+    @staticmethod
+    def _decide(m, k, n, ways, policy="auto", exact_only=True):
+        from repro.engine import parallel as parlib
+        op = E.OpSpec("dense", (m, k), (k, n), spec="...n,nm->...m")
+        pcfg = parlib.ParallelConfig(model=ways, policy=policy,
+                                     exact_only=exact_only)
+        return op, E.plan_op(op, "xla"), parlib.decide(
+            op, E.plan_op(op, "xla"), pcfg)
+
+    @SETTINGS
+    @given(gemm, ways, policy)
+    def test_wire_words_iff_collective(self, g, w, policy):
+        _, _, sd = self._decide(*g, w, policy)
+        assert (sd.wire_words == 0) == (sd.collective == "none")
+        assert (sd.collective_cycles == 0) == (sd.collective == "none")
+
+    @SETTINGS
+    @given(gemm, ways, policy)
+    def test_exec_cycles_bounded_by_global(self, g, w, policy):
+        op, plan, sd = self._decide(*g, w, policy)
+        pinned = dataclasses.replace(plan, shard=sd)
+        assert pinned.exec_cycles <= pinned.cycles
+        if sd.strategy == "replicate" or sd.ways <= 1:
+            assert pinned.exec_cycles == pinned.cycles
+        else:
+            assert pinned.exec_cycles == -(-plan.cycles // sd.ways)
+
+    @SETTINGS
+    @given(gemm, ways, st.booleans())
+    def test_shard_only_when_divisible(self, g, w, exact_only):
+        m, k, n = g
+        _, _, sd = self._decide(m, k, n, w, "auto", exact_only)
+        if sd.strategy == "shard_n":
+            assert n % sd.ways == 0
+        if sd.strategy == "shard_k":
+            assert not exact_only and k % sd.ways == 0
+
+    @SETTINGS
+    @given(gemm, policy)
+    def test_one_way_mesh_is_noop(self, g, policy):
+        _, plan, sd = self._decide(*g, 1, policy)
+        assert sd.ways == 1 and sd.collective == "none"
+        pinned = dataclasses.replace(plan, shard=sd)
+        assert pinned.exec_cycles == plan.cycles
+
+    @SETTINGS
+    @given(st.integers(1, 4), st.integers(1, 8))
+    def test_network_latency_unchanged_by_model_1(self, batch, _w):
+        from repro.engine.parallel import ParallelConfig
+        from repro.models import cnn
+        base = E.plan_network(cnn.program("alexnet", batch=batch),
+                              E.EngineConfig())
+        one = E.plan_network(cnn.program("alexnet", batch=batch),
+                             E.EngineConfig(parallel=ParallelConfig()))
+        assert one.total_latency_s == base.total_latency_s
+        assert one.collective_words == 0

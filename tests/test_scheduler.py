@@ -330,8 +330,9 @@ class TestBucketing:
         sched = SCH.Scheduler(config=serving_config, max_batch=4)
         entry = sched.register("mlp", prog, shared_args=(w,))
         sched.warmup()
-        # the whole pack -> apply -> unpack path exists per bucket
-        assert sorted(entry.compiled) == [1, 2, 4]
+        # the whole pack -> apply -> unpack path exists per bucket (keys
+        # are (bucket, replica); replica is always 0 without a mesh)
+        assert sorted(entry.compiled) == [(1, 0), (2, 0), (4, 0)]
         assert entry.pack_fn is not None
         assert sorted(entry.unpack) == [1, 2, 4]
         # warmed buckets still serve correctly (and bitwise, per parity)

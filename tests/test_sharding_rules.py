@@ -1,0 +1,113 @@
+"""Mesh-free unit tests for the pure logical-axis -> PartitionSpec mapper
+(repro.parallel.sharding).
+
+`spec_for` / `make_rules` read only `mesh.shape` (an axis-name -> size
+mapping) and `mesh.axis_names`, so a tiny fake stands in for a real
+`jax.sharding.Mesh` — no devices, no `XLA_FLAGS` subprocess harness. This
+pins the two hardware-reality rules the docstring promises (first-dim-wins
+conflict dropping, divisibility fallback) plus the axis-tuple prefix retry
+and trailing-None trimming, all of which previously had coverage only as a
+side effect of the 8-device distributed tests.
+"""
+import dataclasses
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.parallel import sharding as S
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeMesh:
+    """Duck-typed stand-in: just the mapping and names the mapper reads."""
+    sizes: tuple                    # ((axis, size), ...)
+
+    @property
+    def shape(self):
+        return dict(self.sizes)
+
+    @property
+    def axis_names(self):
+        return tuple(a for a, _ in self.sizes)
+
+
+MESH = FakeMesh((("data", 4), ("model", 4)))
+POD_MESH = FakeMesh((("pod", 2), ("data", 4), ("model", 4)))
+
+
+class TestRuleTable:
+    def test_single_host_axes(self):
+        rules = S.make_rules(MESH)
+        assert rules.dp_axes == ("data",)
+        assert rules.tp_axis == "model"
+        assert rules.lookup(L.D_FF) == "model"
+        assert rules.lookup(None) is None
+        assert rules.lookup("no-such-axis") is None
+
+    def test_multi_pod_batch_axes(self):
+        rules = S.make_rules(POD_MESH)
+        assert rules.dp_axes == ("pod", "data")
+        assert rules.lookup(L.BATCH) == ("pod", "data")
+
+    def test_fsdp_off_replicates_d_model(self):
+        rules = S.make_rules(MESH, fsdp=False)
+        assert rules.lookup(L.D_MODEL) is None
+        assert rules.fsdp_axes == ()
+
+
+class TestSpecFor:
+    def test_plain_tp_weight(self):
+        rules = S.make_rules(MESH)
+        spec = S.spec_for((64, 128), (L.D_MODEL, L.D_FF), rules, MESH)
+        assert spec == P("data", "model")
+
+    def test_first_dim_wins_conflict(self):
+        # MoE w_in (experts, d_model, d_ff): experts takes "model" first,
+        # so d_ff's claim on the same axis drops to None (and trailing
+        # Nones are trimmed from the spec).
+        rules = S.make_rules(MESH)
+        spec = S.spec_for((8, 64, 128), (L.EXPERTS, L.D_MODEL, L.D_FF),
+                          rules, MESH)
+        assert spec == P("model", "data")
+
+    def test_non_divisible_dim_replicates(self):
+        # smollm's 9 heads on a 4-way model axis: 9 % 4 != 0 -> that dim
+        # falls back to replicated, the rest still shard.
+        rules = S.make_rules(MESH)
+        spec = S.spec_for((9, 64), (L.HEADS, L.D_MODEL), rules, MESH)
+        assert spec == P(None, "data")
+
+    def test_axis_tuple_prefix_retry(self):
+        # batch on the multi-pod mesh maps to ("pod", "data") = 8 ways; a
+        # batch of 2 only divides the ("pod",) prefix, so the mapper
+        # shards 2-way instead of replicating outright — and d_model's
+        # FSDP claim on the same tuple then conflicts on "pod" and drops.
+        rules = S.make_rules(POD_MESH)
+        spec = S.spec_for((2, 64), (L.BATCH, L.D_MODEL), rules, POD_MESH)
+        assert spec == P("pod")
+
+    def test_prefix_retry_exhausted_replicates(self):
+        # batch 3 divides neither ("pod","data") nor ("pod",): replicate;
+        # d_model then gets the full FSDP tuple uncontested.
+        rules = S.make_rules(POD_MESH)
+        spec = S.spec_for((3, 64), (L.BATCH, L.D_MODEL), rules, POD_MESH)
+        assert spec == P(None, ("pod", "data"))
+
+    def test_trailing_none_trim(self):
+        rules = S.make_rules(MESH)
+        spec = S.spec_for((32, 7, 5), (L.BATCH, L.HEADS, L.HEAD_DIM),
+                          rules, MESH)
+        assert spec == P("data")
+
+    def test_all_replicated_is_empty_spec(self):
+        rules = S.make_rules(MESH)
+        spec = S.spec_for((7, 5), (L.KV_HEADS, L.HEAD_DIM), rules, MESH)
+        assert spec == P()
+
+    @pytest.mark.parametrize("dim,want", [(4, "model"), (8, "model"),
+                                          (6, None), (2, None)])
+    def test_divisibility_table(self, dim, want):
+        rules = S.make_rules(MESH)
+        spec = S.spec_for((dim,), (L.D_FF,), rules, MESH)
+        assert spec == (P(want) if want else P())
