@@ -15,9 +15,13 @@ emits machine-readable JSON:
     generation workload (tokens asserted bitwise-identical across modes);
   * ``BENCH_tuning.json`` — the kernel autotuner: steady-state min-of-5
     wallclock per workload on the Pallas backend for ``tuning="off"`` vs
-    ``"cached"`` crossed with fused vs unfused epilogues, so the perf
-    trajectory of `engine.tune` is machine-readable. ``--retune``
-    re-benchmarks the workloads' ops and refreshes
+    ``"cached"`` crossed with fused vs unfused epilogues, plus the int8
+    precision axis (quantized vs fp32 throughput and output SNR at the
+    cached+fused operating point), so the perf trajectory of `engine.tune`
+    is machine-readable. An ``int8_gate`` section measures cached+fused
+    int8 vs fp32 on the alexnet_fc GEMM workload (the CI gate asserts
+    int8 >= 1.0x fp32 there). ``--retune`` re-benchmarks the workloads' ops
+    (fp32 and int8 tile entries) and refreshes
     ``.tuning/<device_kind>.json`` (the committed cache CI runs on).
 
   python -m benchmarks.run [--smoke] [--out BENCH_engine.json]
@@ -411,16 +415,21 @@ def _tuning_workload(name: str, spec: dict):
 
 def bench_tuning(smoke: bool, retune: bool = False) -> dict:
     """Steady-state wallclock of the Pallas backend per workload across
-    {tuning off, cached} x {fused, unfused epilogues}, min-of-5.
+    {tuning off, cached} x {fused, unfused epilogues} x {fp32, int8},
+    min-of-5.
 
     The Pallas kernels run in interpret mode on CPU hosts, so absolute
     times are not TPU times — but the *ratios* exercise exactly what the
     autotuner controls: grid-step count and launch granularity per tile
-    config, and op count per fused epilogue.
+    config, op count per fused epilogue, and arithmetic/traffic volume per
+    precision. The int8 variant runs the full quantized path (per-call
+    quantize + int8 kernel + fused dequant epilogue) at cached tiles and
+    reports throughput against cached+fused fp32 plus the output SNR.
     """
     import jax
 
     from repro import engine as E
+    from repro.core import quant
 
     repeats = 5
     names = ["mlp"] if smoke else list(TUNING_WORKLOADS)
@@ -433,27 +442,39 @@ def bench_tuning(smoke: bool, retune: bool = False) -> dict:
         params, x, prog_fused, prog_unfused = _tuning_workload(
             name, TUNING_WORKLOADS[name])
         if retune:
-            tuned = E.tune.tune_program(
-                prog_fused.ops, E.EngineConfig(**base, tuning="autotune"))
-            print(f"# retuned {name}: {tuned} op(s)", file=sys.stderr)
+            for prec in ("fp32", "int8"):
+                tuned = E.tune.tune_program(
+                    prog_fused.ops, E.EngineConfig(**base, tuning="autotune",
+                                                   precision=prec))
+                print(f"# retuned {name} [{prec}]: {tuned} op(s)",
+                      file=sys.stderr)
         variants = {}
-        for mode in ("off", "cached"):
-            for fused in (False, True):
-                prog = prog_fused if fused else prog_unfused
-                net = E.compile(prog, E.EngineConfig(**base, tuning=mode))
+        outputs = {}
+        runs = [(mode, fused, "fp32") for mode in ("off", "cached")
+                for fused in (False, True)]
+        runs.append(("cached", True, "int8"))
+        for mode, fused, prec in runs:
+            prog = prog_fused if fused else prog_unfused
+            net = E.compile(prog, E.EngineConfig(**base, tuning=mode,
+                                                 precision=prec))
+            t0 = time.perf_counter()
+            y = jax.block_until_ready(net.apply(params, x))
+            t_first = time.perf_counter() - t0
+            wall = float("inf")
+            for _ in range(repeats):
                 t0 = time.perf_counter()
                 jax.block_until_ready(net.apply(params, x))
-                t_first = time.perf_counter() - t0
-                wall = float("inf")
-                for _ in range(repeats):
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(net.apply(params, x))
-                    wall = min(wall, time.perf_counter() - t0)
-                variants[f"{mode}_{'fused' if fused else 'unfused'}"] = {
-                    "first_call_s": t_first,
-                    "steady_call_s": wall,
-                    "tiles": [list(t) if t else None for t in net.tiles()],
-                }
+                wall = min(wall, time.perf_counter() - t0)
+            label = f"{mode}_{'fused' if fused else 'unfused'}" \
+                + ("_int8" if prec == "int8" else "")
+            outputs[label] = y
+            variants[label] = {
+                "first_call_s": t_first,
+                "steady_call_s": wall,
+                "tiles": [list(t) if t else None for t in net.tiles()],
+            }
+            if prec == "int8":
+                variants[label]["precisions"] = list(net.precisions())
         row = {
             "name": name,
             "batch": TUNING_WORKLOADS[name]["batch"],
@@ -468,10 +489,60 @@ def bench_tuning(smoke: bool, retune: bool = False) -> dict:
             "speedup_fused_vs_unfused":
                 variants["cached_unfused"]["steady_call_s"]
                 / variants["cached_fused"]["steady_call_s"],
+            # the precision axis: quantized vs fp32 at the same (cached,
+            # fused) operating point, plus output fidelity
+            "speedup_int8_vs_fp32":
+                variants["cached_fused"]["steady_call_s"]
+                / variants["cached_fused_int8"]["steady_call_s"],
+            "int8_snr_db": float(quant.snr_db(
+                outputs["cached_fused"], outputs["cached_fused_int8"])),
         }
         out["workloads"].append(row)
+    out["int8_gate"] = _bench_int8_gate(repeats)
     cache = E.tune.load_cache()
     out["cache_entries"] = len(cache.get("entries", {}))
+    return out
+
+
+def _bench_int8_gate(repeats: int) -> dict:
+    """The int8-vs-fp32 CI gate measurement: cached+fused fp32 against
+    cached+fused int8 on the alexnet_fc GEMM workload (the paper's FC
+    side), min-of-N, plus output SNR.
+
+    Runs cached tiles only — the untuned variants of this workload cost
+    ~18 s/call in interpret mode and say nothing about the precision axis —
+    so the gate stays cheap enough for the CI smoke path. alexnet_fc is
+    the gate workload (not mlp) because its GEMMs are large enough that
+    the int8 path's structural win (bigger tiles fit VMEM at 1 byte/elt →
+    fewer grid steps; half the operand traffic) dominates the per-call
+    quantization overhead; on the small mlp stack that overhead rivals
+    the entire fp32 runtime under CPU interpret mode, which measures the
+    quantize ops, not the datapath the gate protects.
+    """
+    import jax
+
+    from repro import engine as E
+    from repro.core import quant
+
+    params, x, prog_fused, _ = _tuning_workload(
+        "alexnet_fc", TUNING_WORKLOADS["alexnet_fc"])
+    out = {"workload": "alexnet_fc"}
+    ys = {}
+    for prec in ("fp32", "int8"):
+        net = E.compile(prog_fused, E.EngineConfig(
+            backend="pallas", interpret=True, tuning="cached",
+            precision=prec))
+        ys[prec] = jax.block_until_ready(net.apply(params, x))
+        wall = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(net.apply(params, x))
+            wall = min(wall, time.perf_counter() - t0)
+        out[f"{prec}_steady_call_s"] = wall
+        out[f"{prec}_tiles"] = [list(t) if t else None for t in net.tiles()]
+    out["speedup_int8_vs_fp32"] = (out["fp32_steady_call_s"]
+                                   / out["int8_steady_call_s"])
+    out["int8_snr_db"] = float(quant.snr_db(ys["fp32"], ys["int8"]))
     return out
 
 
@@ -487,7 +558,13 @@ def emit_tuning_json(path: str, smoke: bool, retune: bool,
         emit(f"tuning/{row['name']}_speedup,0,"
              f"tuned_fused_vs_baseline="
              f"{row['speedup_tuned_fused_vs_baseline']:.2f}x;"
-             f"fused_vs_unfused={row['speedup_fused_vs_unfused']:.2f}x")
+             f"fused_vs_unfused={row['speedup_fused_vs_unfused']:.2f}x;"
+             f"int8_vs_fp32={row['speedup_int8_vs_fp32']:.2f}x;"
+             f"int8_snr_db={row['int8_snr_db']:.1f}")
+    g = result["int8_gate"]
+    emit(f"tuning/int8_gate_{g['workload']},0,"
+         f"int8_vs_fp32={g['speedup_int8_vs_fp32']:.2f}x;"
+         f"int8_snr_db={g['int8_snr_db']:.1f}")
     print(f"# wrote {path}", file=sys.stderr)
 
 

@@ -115,6 +115,65 @@ def conv2d_gfid(x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0,
     return out.astype(x.dtype)
 
 
+def conv2d_gfid_int8(xq: jax.Array, wq: jax.Array, stride: int = 1,
+                     pad: int = 0, groups: int = 1) -> jax.Array:
+    """int8 shifted-GEMM convolution with exact int32 accumulation.
+
+    Same band-by-band GFID lowering as `conv2d_gfid`, but each per-tap
+    contraction over C_in runs through `quant.int8_matmul_i32` (K-chunked
+    fp32 dots, exact below 2²⁴, summed in int32). Exact integer
+    accumulation is order-independent, so this matches the Pallas int8
+    kernel and `conv2d_reference_int8` bitwise. Returns int32 accumulators
+    (B, H_out, W_out, C_out); the caller applies the dequant epilogue.
+    """
+    from repro.core import quant
+    if xq.ndim != 4 or wq.ndim != 4:
+        raise ValueError(
+            f"expected NHWC x and HWIO w, got {xq.shape} {wq.shape}")
+    h_f, w_f, c_in_g, c_out = wq.shape
+    if pad:
+        xq = jnp.pad(xq, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    b, h_in, w_in, c_in = xq.shape
+    if c_in // groups != c_in_g:
+        raise ValueError(f"groups mismatch: {c_in}/{groups} != {c_in_g}")
+    h_out = (h_in - h_f) // stride + 1
+    w_out = (w_in - w_f) // stride + 1
+
+    out_shards = []
+    cg = c_in // groups
+    og = c_out // groups
+    for g in range(groups):
+        xg = xq[..., g * cg:(g + 1) * cg]
+        acc = jnp.zeros((b, h_out, w_out, og), dtype=jnp.int32)
+        for j in range(h_f):
+            for i in range(w_f):
+                xs = jax.lax.slice(
+                    xg,
+                    (0, j, i, 0),
+                    (b, j + (h_out - 1) * stride + 1,
+                     i + (w_out - 1) * stride + 1, cg),
+                    (1, stride, stride, 1))
+                wg = wq[j, i, :, g * og:(g + 1) * og]
+                acc = acc + quant.int8_matmul_i32(xs, wg)
+        out_shards.append(acc)
+    return jnp.concatenate(out_shards, axis=-1) if groups > 1 else \
+        out_shards[0]
+
+
+def conv2d_reference_int8(xq: jax.Array, wq: jax.Array, stride: int = 1,
+                          pad: int = 0, groups: int = 1) -> jax.Array:
+    """XLA's native int8 conv with int32 accumulation (exact, hence
+    bitwise identical to `conv2d_gfid_int8` under any op ordering).
+    Returns int32 accumulators; the caller applies the dequant epilogue."""
+    return jax.lax.conv_general_dilated(
+        xq, wq,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32)
+
+
 def conv1d_depthwise_xla(x: jax.Array, w: jax.Array, *,
                          causal: bool = True) -> jax.Array:
     """Depthwise 1-D conv as a single XLA conv op (feature_group_count=D).

@@ -1,10 +1,16 @@
-"""16-bit fixed-point simulation (paper §5.1).
+"""Quantization: 16-bit fixed-point simulation (paper §5.1) and int8 helpers.
 
 The paper quantizes activations and weights to 16-bit fixed point with 2 and
 15 fractional bits respectively, reporting < 0.5 % accuracy degradation on
 AlexNet / VGG-16 / ResNet-50. We simulate the same Qm.f grid in JAX so the
 CNN reproduction can quantify the functional gap between float and the
 paper's arithmetic.
+
+This module is also the single source of truth for the engine's int8
+execution path (``EngineConfig(precision="int8")``): symmetric per-row /
+per-channel scales, the pinned rounding rule, and the exact-int32 matmul
+that every backend (pallas / xla / ref) shares so quantized results are
+bitwise identical across backends.
 """
 from __future__ import annotations
 
@@ -36,18 +42,128 @@ ACT_FORMAT = FixedPointFormat(16, 2)
 WEIGHT_FORMAT = FixedPointFormat(16, 15)   # Q0.15
 PARTIAL_FORMAT = FixedPointFormat(24, 17)  # 24-bit PE scratch (paper §5)
 
+# int8 symmetric range. ±127 (not -128) keeps the grid symmetric under
+# negation and bounds every product by 127², which the exactness argument
+# for INT8_EXACT_K below relies on.
+INT8_QMAX = 127
+
+# Largest contraction chunk whose int8×int8 partial sum is exactly
+# representable in fp32: 1024 · 127 · 127 = 16 516 096 < 2²⁴. Every partial
+# sum along the way is bounded by the sum of |products|, so chunking the K
+# axis at this size lets all backends run the *fast* fp32 GEMM path and
+# still recover bit-exact int32 accumulators (fp32 integer arithmetic is
+# exact below 2²⁴; a native int8→int32 dot is ~14x slower on CPU XLA).
+INT8_EXACT_K = 1024
+
+
+def round_half_away(x: jax.Array) -> jax.Array:
+    """Round to nearest integer, ties away from zero.
+
+    ``jnp.round`` implements IEEE round-half-to-even (banker's rounding);
+    fixed-point CNN hardware like the paper's MMIE implements the classic
+    DSP convention — add half an LSB and truncate — which rounds ties away
+    from zero. All quantizers in this module pin that convention.
+    """
+    x = x.astype(jnp.float32)
+    return jnp.trunc(x + jnp.where(x >= 0, 0.5, -0.5).astype(jnp.float32))
+
 
 def quantize(x: jax.Array, fmt: FixedPointFormat) -> jax.Array:
-    """Round-to-nearest onto the fixed-point grid, with saturation."""
-    q = jnp.round(x.astype(jnp.float32) * fmt.scale)
+    """Project onto the Qm.f fixed-point grid, with saturation.
+
+    Rounding is pinned to round-half-to-nearest, **ties away from zero**
+    (see :func:`round_half_away`) — the add-half-LSB-and-truncate rule of
+    the paper's fixed-point datapath — not ``jnp.round``'s half-to-even.
+    The two differ exactly at grid midpoints: Q13.2 quantizes 0.375 to 0.5
+    here, where ``jnp.round`` would give 0.25.
+    """
+    q = round_half_away(x.astype(jnp.float32) * fmt.scale)
     q = jnp.clip(q, fmt.min_int, fmt.max_int)
     return q / fmt.scale
 
 
-def quantization_snr_db(x: jax.Array, fmt: FixedPointFormat) -> jax.Array:
-    """Signal-to-quantization-noise ratio in dB (sanity metric for tests)."""
-    xq = quantize(x, fmt)
-    err = (x - xq).astype(jnp.float32)
-    num = jnp.mean(x.astype(jnp.float32) ** 2)
+def snr_db(reference: jax.Array, test: jax.Array) -> jax.Array:
+    """Signal-to-noise ratio of `test` against `reference`, in dB."""
+    ref = reference.astype(jnp.float32)
+    err = ref - test.astype(jnp.float32)
+    num = jnp.mean(ref ** 2)
     den = jnp.mean(err ** 2) + 1e-30
     return 10.0 * jnp.log10(num / den)
+
+
+def quantization_snr_db(x: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    """Signal-to-quantization-noise ratio in dB (sanity metric for tests)."""
+    return snr_db(x, quantize(x, fmt))
+
+
+# ---------------------------------------------------------------------------
+# int8 symmetric quantization (engine precision="int8")
+# ---------------------------------------------------------------------------
+
+# The scale is *defined* as absmax times the fp32 reciprocal of 127, not
+# absmax / 127: XLA strength-reduces division by a compile-time constant to
+# a reciprocal multiply under jit but executes a true divide op-by-op, so
+# the literal `/ 127` gives jit and eager runs last-ulp-different scales.
+# Writing the multiply explicitly makes both paths compute the same thing.
+_INV_QMAX = jnp.float32(1.0) / jnp.float32(INT8_QMAX)
+
+
+def symmetric_scale(x: jax.Array, axis=None) -> jax.Array:
+    """Symmetric int8 scale: absmax * (1/127) over `axis`, keepdims.
+
+    All-zero slices get scale 1.0 so they quantize to exact zeros instead
+    of NaNs. Reducing per-row for activations / per-output-channel for
+    weights keeps scales *batch-invariant*: each example's scale depends
+    only on that example, so batched and solo runs quantize identically —
+    the property the scheduler's bitwise parity contract relies on.
+    """
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    return jnp.where(absmax > 0, absmax * _INV_QMAX,
+                     1.0).astype(jnp.float32)
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize to int8 on a symmetric grid with the pinned rounding rule."""
+    q = round_half_away(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+
+def quantize_conv_operands(x: jax.Array, w: jax.Array):
+    """Shared int8 quantization rule for NHWC conv: per-example activation
+    scales (reduce H, W, C — batch-invariant, so batched and solo runs
+    quantize identically) and per-output-channel weight scales. Every
+    backend quantizes through here, which is what makes the three-backend
+    bitwise parity contract hold on the int8 path. Returns
+    (xq, wq, sx (B,1,1,1), sw (1,1,1,C_out))."""
+    sx = symmetric_scale(x, axis=(1, 2, 3))
+    sw = symmetric_scale(w, axis=(0, 1, 2))
+    return quantize_int8(x, sx), quantize_int8(w, sw), sx, sw
+
+
+def quantize_matmul_operands(x: jax.Array, w: jax.Array):
+    """Shared int8 quantization rule for (..., K) @ (K, N): per-row
+    activation scales (reduce K only — batch-invariant) and per-column
+    weight scales. Returns (xq, wq, sx (..., 1), sw (1, N))."""
+    sx = symmetric_scale(x, axis=-1)
+    sw = symmetric_scale(w, axis=0)
+    return quantize_int8(x, sx), quantize_int8(w, sw), sx, sw
+
+
+def int8_matmul_i32(xq: jax.Array, wq: jax.Array) -> jax.Array:
+    """Exact int32 GEMM `(..., K) @ (K, N)` for int8 operands.
+
+    Runs K-chunked fp32 dots (chunk ≤ INT8_EXACT_K keeps every partial sum
+    below 2²⁴, hence exact) and accumulates the integer-valued partials in
+    int32. Exact integer accumulation is order-independent, which is what
+    makes pallas / xla / ref — each with different blocking — bitwise
+    identical on the quantized path.
+    """
+    k = xq.shape[-1]
+    acc = None
+    for c0 in range(0, max(k, 1), INT8_EXACT_K):
+        part = jnp.dot(
+            xq[..., c0:c0 + INT8_EXACT_K].astype(jnp.float32),
+            wq[c0:c0 + INT8_EXACT_K].astype(jnp.float32),
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc

@@ -51,8 +51,9 @@ from repro.engine.ledger import (  # noqa: F401
 from repro.engine.parallel import (  # noqa: F401
     ParallelConfig, data_groups, make_mesh)
 from repro.engine.plan import (  # noqa: F401
-    EnginePlan, OpSpec, ShardDecision, auto_backend, dense_spec, parse_einsum,
-    plan_conv1d_depthwise, plan_conv2d, plan_einsum, plan_gather, plan_op)
+    PRECISIONS, EnginePlan, OpSpec, ShardDecision, auto_backend, dense_spec,
+    parse_einsum, plan_conv1d_depthwise, plan_conv2d, plan_einsum,
+    plan_gather, plan_op, supports_int8, with_precision)
 from repro.engine.program import (  # noqa: F401
     CompiledNet, NetworkPlan, Program, compile, infer_batch_axes,
     plan_network, trace_program)

@@ -15,7 +15,11 @@ for the backend: the explicit ``backend=`` argument, then the plan of an
 executing `CompiledNet` (program replay), then the ambient
 `EngineConfig` (`using_config` / `using_backend` context or the process
 default — see `engine/config.py`); `interpret` and the accumulation policy
-resolve explicit-argument-first against the same config.
+resolve explicit-argument-first against the same config. The numeric
+precision resolves the same way: an explicit ``precision=`` argument wins
+(validated hard — ``"int8"`` on an op outside the int8 contract raises),
+then a replayed plan's pinned `plan.precision`, then the ambient config's
+`precision` (silently downgraded to fp32 for unsupported ops).
 
 Numerics: `accum_dtype=None` (the default for `einsum`) reproduces a plain
 `jnp.einsum` / `@` — same dot_general, same output dtype — so migrating a
@@ -27,6 +31,7 @@ given (the legacy engine always cast back to `x.dtype`).
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
 from typing import Iterator, List, Optional, Sequence, Tuple
 
@@ -68,7 +73,9 @@ def _resolve_accum(arg, op_kind: str):
 
 class _ProgramState(threading.local):
     def __init__(self) -> None:
-        self.capture: List[List[planlib.OpSpec]] = []
+        # each capture frame is (ops_list, precisions_list_or_None)
+        self.capture: List[Tuple[List[planlib.OpSpec],
+                                 Optional[List[Optional[str]]]]] = []
         self.replay: List["_Cursor"] = []
 
 
@@ -102,10 +109,18 @@ _PROG = _ProgramState()
 
 
 @contextlib.contextmanager
-def capturing(into: List[planlib.OpSpec]) -> Iterator[List[planlib.OpSpec]]:
+def capturing(into: List[planlib.OpSpec],
+              precisions_into: Optional[List[Optional[str]]] = None,
+              ) -> Iterator[List[planlib.OpSpec]]:
     """Record the `OpSpec` of every engine call in the block, in call order
-    (ledgers are paused: a capture is a dry shape-trace, not a run)."""
-    _PROG.capture.append(into)
+    (ledgers are paused: a capture is a dry shape-trace, not a run).
+
+    `precisions_into`, when given, receives one entry per op: the call's
+    *explicit* ``precision=`` argument, or None when the op left precision
+    to the ambient config — `engine.compile` uses this to honor per-op
+    precision overrides baked into a program's forward (e.g.
+    ``models.cnn.program(..., precisions={"fc6": "int8"})``)."""
+    _PROG.capture.append((into, precisions_into))
     try:
         with ledger_mod.paused():
             yield into
@@ -135,8 +150,10 @@ def replaying(pairs: Sequence[Tuple[planlib.OpSpec, planlib.EnginePlan]],
 def _plan_for(op: planlib.OpSpec,
               backend_arg: Optional[str]) -> planlib.EnginePlan:
     """Capture/replay hook + plan resolution for one issued op."""
-    for cap in _PROG.capture:
-        cap.append(op)
+    for ops, precs in _PROG.capture:
+        ops.append(op)
+        if precs is not None:
+            precs.append(None)      # _pin_precision backfills explicit args
     if _PROG.replay:
         plan = _PROG.replay[-1].next_for(op)
         if backend_arg is None:
@@ -155,6 +172,42 @@ def _plan_for(op: planlib.OpSpec,
 
 def _interp(interpret: Optional[bool]) -> bool:
     return current_config().interpret if interpret is None else interpret
+
+
+def _pin_precision(op: planlib.OpSpec, plan: planlib.EnginePlan,
+                   arg: Optional[str]) -> planlib.EnginePlan:
+    """Resolve the op's numeric precision and pin it onto the plan.
+
+    Resolution mirrors the backend argument: an explicit ``precision=``
+    wins — validated hard, even during program replay — then a replayed
+    plan's pinned `plan.precision`, then the ambient config's `precision`
+    (silently downgraded to fp32 for ops the int8 contract does not cover).
+    Runs *before* tile resolution so the tuner keys on the precision.
+    """
+    if arg is not None:
+        if arg not in planlib.PRECISIONS:
+            raise ValueError(f"unknown precision {arg!r}; expected one of "
+                             f"{planlib.PRECISIONS}")
+        if arg == "int8" and not planlib.supports_int8(op):
+            raise ValueError(
+                f"precision='int8' requested for {op.kind} "
+                f"{op.x_shape}x{op.w_shape}, but the int8 contract only "
+                "covers conv2d and canonical-GEMM dense ops")
+        prec = arg
+        # surface the explicit override to any active capture, so a
+        # compiled program's exec pairs pin it (not just this eager call)
+        for _, precs in _PROG.capture:
+            if precs:
+                precs[-1] = arg
+    elif _PROG.replay:
+        prec = plan.precision           # pinned by engine.compile
+    else:
+        cfg = current_config()
+        prec = (cfg.precision if cfg.precision == "fp32"
+                or planlib.supports_int8(op) else "fp32")
+    if plan.precision != prec:
+        plan = dataclasses.replace(plan, precision=prec)
+    return plan
 
 
 def _maybe_tile(op: planlib.OpSpec,
@@ -213,7 +266,7 @@ def _row_pad_amount(structure: planlib.EinsumStructure,
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
            groups: int = 1, bias: Optional[jax.Array] = None,
            act: Optional[str] = None, backend: Optional[str] = None,
-           accum_dtype=_UNSET,
+           accum_dtype=_UNSET, precision: Optional[str] = None,
            interpret: Optional[bool] = None) -> jax.Array:
     """Conv mode. x: (B,H,W,C_in) NHWC; w: (H_f,W_f,C_in/g,C_out) HWIO.
     Returns (B,H_out,W_out,C_out) in x.dtype.
@@ -221,12 +274,16 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
     `bias` ((C_out,)) and `act` ("relu" | "gelu") form the op's fused
     epilogue: conv+bias+activation is one kernel launch on the Pallas
     backend (applied in the fp32 accumulator before writeback) and ordinary
-    fused post-ops elsewhere."""
+    fused post-ops elsewhere. On the int8 path (`precision="int8"` here or
+    on the config) dequant+bias+act fuse into the same writeback, so the
+    quantized conv is still one launch; `accum_dtype` is then ignored (the
+    int8 contract pins an exact int32 accumulator)."""
     op = planlib.OpSpec("conv2d", tuple(map(int, x.shape)),
                         tuple(map(int, w.shape)), stride=int(stride),
                         pad=int(pad), groups=int(groups))
     _check_epilogue(bias, act, op.w_shape[3], "conv2d")
-    plan = _maybe_tile(op, _plan_for(op, backend))
+    plan = _pin_precision(op, _plan_for(op, backend), precision)
+    plan = _maybe_tile(op, plan)
     ledger_mod.record(plan)
     out = dispatch.get_backend(plan.backend).conv2d(
         x, w, plan, stride=stride, pad=pad, groups=groups,
@@ -251,7 +308,8 @@ def conv1d_depthwise(x: jax.Array, w: jax.Array, *, causal: bool = True,
 def einsum(spec: str, x: jax.Array, w: jax.Array, *,
            bias: Optional[jax.Array] = None, act: Optional[str] = None,
            backend: Optional[str] = None, accum_dtype=_UNSET,
-           out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
+           out_dtype=None, precision: Optional[str] = None,
+           interpret: Optional[bool] = None) -> jax.Array:
     """FC mode for any two-operand dense contraction (weights second).
 
     `bias` ((n_out,), one entry per trailing output feature) and `act`
@@ -275,7 +333,8 @@ def einsum(spec: str, x: jax.Array, w: jax.Array, *,
         _check_epilogue(bias, act, n_out, f"einsum {spec!r}")
     elif act is not None:
         _check_epilogue(None, act, 0, f"einsum {spec!r}")
-    plan = _maybe_tile(op, _plan_for(op, backend))
+    plan = _pin_precision(op, _plan_for(op, backend), precision)
+    plan = _maybe_tile(op, plan)
     ledger_mod.record(plan)
     pad = _row_pad_amount(structure, op.x_shape)
     if pad:
@@ -305,6 +364,7 @@ def einsum(spec: str, x: jax.Array, w: jax.Array, *,
 def dense(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
           act: Optional[str] = None, backend: Optional[str] = None,
           accum_dtype=_UNSET, out_dtype=None,
+          precision: Optional[str] = None,
           interpret: Optional[bool] = None) -> jax.Array:
     """FC mode (W_f = 1): x (..., n) @ w (n, m) -> (..., m), with an
     optional fused bias ((m,)) / activation epilogue."""
@@ -312,16 +372,20 @@ def dense(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
         accum_dtype = _resolve_accum(accum_dtype, "dense")
     return einsum(planlib.dense_spec(x.ndim), x, w, bias=bias, act=act,
                   backend=backend, accum_dtype=accum_dtype,
-                  out_dtype=out_dtype, interpret=interpret)
+                  out_dtype=out_dtype, precision=precision,
+                  interpret=interpret)
 
 
 def proj(x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+         precision: Optional[str] = None,
          interpret: Optional[bool] = None) -> jax.Array:
     """FC-mode parameter GEMM with plain-`@` numerics (`accum_dtype=None`:
     same dot_general, same output dtype) — the drop-in replacement for
-    `x @ w` on model parameter paths."""
+    `x @ w` on model parameter paths. An explicit `precision="int8"` (or
+    an ambient int8 config) trades the plain-`@` guarantee for the
+    quantized contract, like any other FC-mode op."""
     return dense(x, w, backend=backend, accum_dtype=None,
-                 interpret=interpret)
+                 precision=precision, interpret=interpret)
 
 
 def paged_gather(pool: jax.Array, table: jax.Array, *,
@@ -356,7 +420,8 @@ def paged_gather(pool: jax.Array, table: jax.Array, *,
 # epilogue, when given, runs before the cast — i.e. in fp32).
 def matmul(x: jax.Array, w: jax.Array, *, bias: Optional[jax.Array] = None,
            act: Optional[str] = None, backend: Optional[str] = None,
+           precision: Optional[str] = None,
            interpret: Optional[bool] = None) -> jax.Array:
     return dense(x, w, bias=bias, act=act, backend=backend,
                  accum_dtype=jnp.float32, out_dtype=x.dtype,
-                 interpret=interpret)
+                 precision=precision, interpret=interpret)

@@ -31,6 +31,7 @@ from repro.engine.parallel import ParallelConfig
 
 _POLICIES = ("fixed", "auto")
 _TUNING_MODES = ("off", "cached", "autotune")
+_PRECISIONS = ("fp32", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,19 @@ class EngineConfig:
                 serving schedulers spread replicas over the data axis.
                 With the default `exact_only=True` policy, sharded
                 outputs stay bitwise identical to single-device ones.
+    precision — numeric execution precision. "fp32" (default) keeps the
+                fp32 datapath. "int8" quantizes conv2d and canonical-GEMM
+                dense ops symmetrically (per-row / per-example activation
+                scales, per-channel weight scales — batch-invariant so
+                scheduler parity holds), accumulates exactly in int32, and
+                fuses dequant+bias+act into the kernel epilogue; the
+                quantize→dequantize semantics are identical across the
+                pallas/xla/ref backends (bitwise). Ops the int8 contract
+                does not cover (non-canonical einsums, depthwise conv1d,
+                gather) silently stay fp32; `accum` is ignored on int8
+                ops. Per-op overrides: every engine op takes
+                `precision=`, which wins over the config (and over a
+                compiled plan's pinned precision) exactly like `backend=`.
     """
 
     backend: str = "xla"
@@ -86,6 +100,7 @@ class EngineConfig:
     row_align: Optional[int] = None
     tuning: str = "off"
     parallel: Optional[ParallelConfig] = None
+    precision: str = "fp32"
 
     def __post_init__(self) -> None:
         if self.parallel is not None and not isinstance(self.parallel,
@@ -101,6 +116,10 @@ class EngineConfig:
             raise ValueError(
                 f"unknown tuning mode {self.tuning!r}; "
                 f"expected one of {_TUNING_MODES}")
+        if self.precision not in _PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; "
+                f"expected one of {_PRECISIONS}")
         if self.row_align is not None and (
                 not isinstance(self.row_align, int) or self.row_align < 1):
             raise ValueError(

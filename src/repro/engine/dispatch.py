@@ -23,11 +23,12 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import gfid
+from repro.core import gfid, quant
 from repro.engine.plan import canonical_gemm
 # the epilogue registry lives in a Pallas-free leaf module: importing the
 # engine must not pull jax.experimental.pallas in for xla/ref-only users
 from repro.kernels.epilogue import ACTS as EPILOGUE_ACTS
+from repro.kernels.epilogue import dequant_epilogue
 
 
 def apply_epilogue(out: jax.Array, bias: Optional[jax.Array],
@@ -49,7 +50,10 @@ class EngineBackend:
 
     Callables receive the already-computed `EnginePlan` so a backend can read
     the mode / MXU tiling — and, when `engine.tune` pinned one, the tuned
-    `plan.tile_config` — instead of re-deriving them. `einsum` receives the
+    `plan.tile_config` — instead of re-deriving them. `plan.precision`
+    carries the resolved numeric precision: the built-in backends run the
+    shared quantize→int32→dequant contract when it is "int8"; custom
+    backends that never read it silently run fp32. `einsum` receives the
     literal spec plus its parsed `EinsumStructure`. `conv2d` and `einsum`
     accept the fused-epilogue kwargs (`bias=`, `act=`): the Pallas backend
     folds them into the kernel's fp32 accumulator, the XLA/ref backends
@@ -91,11 +95,48 @@ def backend_names() -> Tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
+# int8 quantized lowerings shared by the non-Pallas backends
+# ---------------------------------------------------------------------------
+
+def _wants_int8(plan) -> bool:
+    return getattr(plan, "precision", "fp32") == "int8"
+
+
+def _quant_conv2d(conv_i32, x, w, *, stride, pad, groups, bias, act):
+    """Quantize (shared rule), run an exact-int32 conv lowering, dequant
+    through the pinned epilogue chain. `conv_i32` is either the GFID
+    shifted-GEMM (`gfid.conv2d_gfid_int8`) or XLA's native int8 conv
+    (`gfid.conv2d_reference_int8`) — both exact, hence bitwise equal."""
+    xq, wq, sx, sw = quant.quantize_conv_operands(x, w)
+    acc = conv_i32(xq, wq, stride, pad, groups)
+    out = dequant_epilogue(acc, sx * sw, bias, act)
+    return out.astype(x.dtype)
+
+
+def _quant_canonical_einsum(x, w, structure, *, bias, act):
+    """Quantized lowering of a canonical (M, K) @ (K, N) contraction: the
+    same canonicalization as the Pallas path, the shared quantization rule,
+    the exact int32 GEMM, and the pinned dequant epilogue."""
+    c = structure.contract[0]
+    xm = jnp.moveaxis(x, structure.x_labels.index(c), -1)
+    w2 = w if structure.w_labels[0] == c else w.T
+    xq, wq, sx, sw = quant.quantize_matmul_operands(xm, w2)
+    acc = quant.int8_matmul_i32(xq, wq)
+    out = dequant_epilogue(acc, sx * sw, bias, act)
+    # canonical => out_labels == x_free + w_free, which is exactly the
+    # (lead..., N) layout the contraction produced: no transpose needed
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # "xla" — pure-JAX GFID shifted-GEMM lowering
 # ---------------------------------------------------------------------------
 
 def _xla_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret,
                 bias=None, act=None):
+    if _wants_int8(plan):
+        return _quant_conv2d(gfid.conv2d_gfid_int8, x, w, stride=stride,
+                             pad=pad, groups=groups, bias=bias, act=act)
     out = gfid.conv2d_gfid(x, w, stride, pad, groups,
                            accum_dtype=accum_dtype or jnp.float32)
     return apply_epilogue(out, bias, act)
@@ -107,6 +148,8 @@ def _xla_conv1d_dw(x, w, plan, *, causal, interpret):
 
 def _xla_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret,
                 bias=None, act=None):
+    if _wants_int8(plan) and canonical_gemm(structure, w.ndim):
+        return _quant_canonical_einsum(x, w, structure, bias=bias, act=act)
     if accum_dtype is not None:
         out = jnp.einsum(spec, x, w, preferred_element_type=accum_dtype)
     else:
@@ -136,6 +179,9 @@ def gather_impl(backend: "EngineBackend") -> Callable[..., jax.Array]:
 
 def _ref_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret,
                 bias=None, act=None):
+    if _wants_int8(plan):
+        return _quant_conv2d(gfid.conv2d_reference_int8, x, w, stride=stride,
+                             pad=pad, groups=groups, bias=bias, act=act)
     out = gfid.conv2d_reference(x, w, stride, pad, groups)
     return apply_epilogue(out, bias, act)
 
@@ -153,7 +199,8 @@ def _pallas_conv2d(x, w, plan, *, stride, pad, groups, accum_dtype, interpret,
     from repro.kernels import ops
     return ops.gfid_conv2d(x, w, stride=stride, pad=pad, groups=groups,
                            tile=plan.tile_config, bias=bias, act=act,
-                           interpret=interpret)
+                           interpret=interpret,
+                           precision=getattr(plan, "precision", "fp32"))
 
 
 def _pallas_conv1d_dw(x, w, plan, *, causal, interpret):
@@ -177,7 +224,8 @@ def _pallas_einsum(spec, x, w, plan, structure, *, accum_dtype, interpret,
     xm = jnp.moveaxis(x, st.x_labels.index(c), -1)
     w2 = w if st.w_labels[0] == c else w.T
     return ops.gfid_matmul(xm, w2, tile=plan.tile_config, bias=bias, act=act,
-                           interpret=interpret)
+                           interpret=interpret,
+                           precision=getattr(plan, "precision", "fp32"))
 
 
 def _pallas_gather(pool, table, plan, *, interpret):

@@ -180,12 +180,31 @@ class EnginePlan:
     # plan caches stay parallelism-agnostic and `cycles` / `macs` /
     # `ma_words` keep their global (whole-op) meaning everywhere.
     shard: Optional["ShardDecision"] = None
+    # Execution precision pinned by engine.compile / the per-call resolver
+    # (api._resolve_precision): "fp32" or "int8". Like tile_config/shard,
+    # the lru-cached planners never set it — a quantized plan is a
+    # dataclasses.replace of the fp32 analytic plan, so `ma_words` keeps
+    # its paper Table-4 (16-bit-word, fp32-model) meaning everywhere and
+    # the reduced traffic is booked separately via `exec_ma_words`.
+    precision: str = "fp32"
 
     @property
     def performance_efficiency(self) -> float:
         """Paper Fig. 5 metric: useful MACs over peak array MACs."""
         return self.macs / (modes.MMIE_NUM_PES * self.cycles) if self.cycles \
             else 0.0
+
+    @property
+    def exec_ma_words(self) -> int:
+        """Memory-access words as executed: `ma_words` for fp32, halved
+        (ceil) for int8 — int8 operands occupy half a 16-bit MMIE word.
+        The analytic `ma_words` stays pinned to the paper's fp32 model so
+        the Table-4 goldens never move with the precision axis; collective
+        wire words (`ShardDecision.wire_words`) are NOT scaled — sharded
+        ops all-reduce/all-gather fp32 partials, not int8 operands."""
+        if self.precision == "int8":
+            return -(-self.ma_words // 2)
+        return self.ma_words
 
     @property
     def exec_cycles(self) -> int:
@@ -306,6 +325,34 @@ def canonical_gemm(structure: EinsumStructure, w_ndim: int) -> bool:
     return (w_ndim == 2 and len(structure.contract) == 1
             and not structure.batch
             and structure.out_labels == structure.x_free + structure.w_free)
+
+
+PRECISIONS = ("fp32", "int8")
+
+
+def supports_int8(op: OpSpec) -> bool:
+    """True when the int8 quantized contract is defined for `op`: conv2d
+    and canonical-GEMM dense ops. Everything else (non-canonical einsums,
+    depthwise conv1d, gather) stays fp32 even under
+    `EngineConfig(precision="int8")` — a shape-only predicate, so every
+    backend agrees on which ops quantize."""
+    if op.kind == "conv2d":
+        return True
+    if op.kind == "dense":
+        st = parse_einsum(op.spec, len(op.x_shape), len(op.w_shape))
+        return canonical_gemm(st, len(op.w_shape))
+    return False
+
+
+def with_precision(plan: EnginePlan, op: OpSpec,
+                   precision: str) -> EnginePlan:
+    """Pin `precision` onto a plan, downgrading to fp32 for ops outside
+    the int8 contract. The replace-not-mutate shape keeps the lru-cached
+    planners precision-agnostic (same pattern as tile_config / shard)."""
+    p = "int8" if precision == "int8" and supports_int8(op) else "fp32"
+    if p == plan.precision:
+        return plan
+    return dataclasses.replace(plan, precision=p)
 
 
 @functools.lru_cache(maxsize=1024)

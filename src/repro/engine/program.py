@@ -37,7 +37,7 @@ from repro.engine import parallel as parlib
 from repro.engine import tune as tunelib
 from repro.engine.config import EngineConfig, current_config, using_config
 from repro.engine.plan import (EnginePlan, OpSpec, auto_backend,
-                               parse_einsum, plan_op)
+                               parse_einsum, plan_op, with_precision)
 
 _CONV_KINDS = ("conv2d", "conv1d_dw")
 
@@ -182,19 +182,22 @@ def trace_program(fn: Callable[..., Any], *avals: Any,
     """
     if (batch_size is None) != (batch_axes is None):
         raise ValueError("pass batch_size and batch_axes together")
-    return Program(name=name, ops=_capture_ops(fn, avals), fn=fn,
+    return Program(name=name, ops=_capture_ops(fn, avals)[0], fn=fn,
                    in_avals=tuple(avals), batch_size=batch_size,
                    batch_axes=batch_axes)
 
 
 def _capture_ops(fn: Callable[..., Any], avals: Tuple[Any, ...],
-                 ) -> Tuple[OpSpec, ...]:
+                 ) -> Tuple[Tuple[OpSpec, ...], Tuple[Optional[str], ...]]:
+    """Shape-trace `fn` and return (op sequence, per-op explicit precision
+    overrides — None where the call left precision to the config)."""
     ops: list = []
+    precs: list = []
     # The fresh lambda defeats jax.eval_shape's trace cache: a cached trace
     # would skip the function body and record nothing.
-    with api.capturing(ops), using_config(EngineConfig(backend="xla")):
+    with api.capturing(ops, precs), using_config(EngineConfig(backend="xla")):
         jax.eval_shape(lambda *a: fn(*a), *avals)
-    return tuple(ops)
+    return tuple(ops), tuple(precs)
 
 
 # ---------------------------------------------------------------------------
@@ -319,6 +322,24 @@ class NetworkPlan:
     def fc_ma_words(self) -> int:
         return sum(p.ma_words for p in self.fc_plans)
 
+    # -- executed memory traffic (precision-aware; ma_words stays the
+    #    paper's 16-bit Table-4 model so the goldens are precision-invariant)
+
+    @property
+    def conv_exec_ma_words(self) -> int:
+        return sum(p.exec_ma_words for p in self.conv_plans)
+
+    @property
+    def fc_exec_ma_words(self) -> int:
+        return sum(p.exec_ma_words for p in self.fc_plans)
+
+    @property
+    def exec_ma_words(self) -> int:
+        """Memory words actually moved by the execution precision: int8
+        plans halve their 16-bit-word booking (two int8 values per word),
+        fp32 plans book `ma_words` unchanged."""
+        return sum(p.exec_ma_words for p in self.plans)
+
     @property
     def conv_ma_bytes(self) -> int:
         return self.conv_ma_words * modes.MMIE_WORD_BYTES
@@ -391,7 +412,9 @@ def plan_network(program: Program,
     `ShardDecision` so the aggregate latencies price collectives."""
     cfg = current_config() if cfg is None else cfg
     return NetworkPlan(program.name, tuple(
-        parlib.attach(op, plan_op(op, _select_backend(op, cfg)),
+        parlib.attach(op,
+                      with_precision(plan_op(op, _select_backend(op, cfg)),
+                                     op, cfg.precision),
                       cfg.parallel)
         for op in program.ops))
 
@@ -477,6 +500,12 @@ class CompiledNet:
         return tuple("replicate" if plan.shard is None
                      else plan.shard.strategy for _, plan in pairs)
 
+    def precisions(self) -> Tuple[str, ...]:
+        """Per-op execution precision, in call order — "fp32" for every op
+        the int8 contract does not cover, whatever the config asked for."""
+        pairs = self.exec_pairs if self.exec_pairs is not None else ()
+        return tuple(plan.precision for _, plan in pairs)
+
 
 def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
             cfg: Optional[EngineConfig] = None, *,
@@ -522,16 +551,21 @@ def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
     net_plan = plan_network(program, cfg)
     exec_pairs = None
     if program.fn is not None:
-        exec_ops = _capture_ops(program.fn, program.in_avals)
+        exec_ops, exec_precs = _capture_ops(program.fn, program.in_avals)
         # shard decisions are pinned into the exec pairs only when a mesh
         # actually backs them: a sharded plan executes collectives, which
         # only exist inside the shard_mapped body
         exec_pcfg = pcfg if mesh is not None else None
+        # precision pins before tile resolution so the tuner keys on it;
+        # a per-op override baked into the forward (cnn.program
+        # precisions=...) wins over the config's precision
         exec_pairs = tuple(
             (op, parlib.attach(
-                op, tunelib.attach(op, plan_op(op, _select_backend(op, cfg)),
-                                   cfg, allow_autotune=True),
+                op, tunelib.attach(
+                    op, with_precision(plan_op(op, _select_backend(op, cfg)),
+                                       op, prec or cfg.precision),
+                    cfg, allow_autotune=True),
                 exec_pcfg))
-            for op in exec_ops)
+            for op, prec in zip(exec_ops, exec_precs))
     return CompiledNet(program, cfg, net_plan, exec_pairs,
                        donate_argnums=donate_argnums, mesh=mesh)

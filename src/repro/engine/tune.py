@@ -47,7 +47,10 @@ from repro.engine.config import EngineConfig
 
 Tile = Tuple[int, ...]
 
-CACHE_VERSION = 1
+# v2: tile keys and candidate grids gained a precision dimension (int8
+# tiles align the M block to the 32-row int8 sublane); a v1 cache no
+# longer matches and degrades cleanly to the kernel defaults.
+CACHE_VERSION = 2
 CACHE_DIR_ENV = "REPRO_TUNING_DIR"
 MAX_CANDIDATES = 10         # benchmarked per op after analytic pruning
 BENCH_REPEATS = 3           # min-of-N wallclock per candidate
@@ -159,16 +162,19 @@ def _canonical_dense(op: planlib.OpSpec) -> Optional[Tuple[int, int, int]]:
     return int(m), int(k), int(n)
 
 
-def tile_key(op: planlib.OpSpec, backend: str,
-             accum: Optional[str]) -> Optional[str]:
+def tile_key(op: planlib.OpSpec, backend: str, accum: Optional[str],
+             precision: str = "fp32") -> Optional[str]:
     """Stable (process-independent) cache key for one tunable op, or None
     when the op has no tile knob on `backend`.
 
     Dense keys are (K, N) only — the row count M is execution detail (it
     never changes accumulation order, and dropping it lets every batch
     bucket share one config). Conv keys drop the batch dim for the same
-    reason. The hash is sha1 over the canonical JSON, so keys survive
-    process restarts and hash randomization (unlike `hash(op)`).
+    reason. `precision` is a key dimension: the int8 kernels have their
+    own sublane alignment and arithmetic cost, so fp32 winners must not
+    leak onto the quantized path (or vice versa). The hash is sha1 over
+    the canonical JSON, so keys survive process restarts and hash
+    randomization (unlike `hash(op)`).
     """
     if backend != "pallas":
         return None
@@ -183,7 +189,7 @@ def tile_key(op: planlib.OpSpec, backend: str,
                  op.stride, op.pad, op.groups]
     else:
         return None
-    ident += [backend, accum or "default"]
+    ident += [backend, accum or "default", precision]
     blob = json.dumps(ident, sort_keys=True).encode()
     return hashlib.sha1(blob).hexdigest()[:16]
 
@@ -205,18 +211,25 @@ class Candidate:
     score: float        # analytic cost, lower is better (pruning only)
 
 
-def _dense_candidates(m: int, k: int, n: int) -> List[Candidate]:
+def _dense_candidates(m: int, k: int, n: int,
+                      precision: str = "fp32") -> List[Candidate]:
     """MXU-aligned (bm, bk, bn) grid for an (M, K) @ (K, N) GEMM, scored by
-    padded MACs + launch overhead, VMEM-guarded."""
-    mp8, kp, np_ = _round_up(m, 8), _round_up(k, 128), _round_up(n, 128)
-    bms = sorted({v for v in (8, 64, 128, 256, mp8) if v <= mp8})
+    padded MACs + launch overhead, VMEM-guarded. int8 candidates align the
+    M block to the 32-row int8 sublane (fp32 packs 8 rows per sublane,
+    int8 packs 32) and budget 1-byte operand tiles plus the int32 VMEM
+    accumulator."""
+    sub = 32 if precision == "int8" else 8
+    mp8, kp, np_ = _round_up(m, sub), _round_up(k, 128), _round_up(n, 128)
+    bms = sorted({v for v in (sub, 64, 128, 256, mp8)
+                  if v <= mp8 and v % sub == 0})
     bks = sorted({v for v in (128, 256, 512, 1024, kp) if v <= kp})
     bns = sorted({v for v in (128, 256, 512, 1024, np_) if v <= np_})
+    elt = 1 if precision == "int8" else 4
     out: List[Candidate] = []
     for bm in bms:
         for bk in bks:
             for bn in bns:
-                vmem = 4 * (bm * bk + bk * bn + bm * bn + bn)
+                vmem = elt * (bm * bk + bk * bn) + 4 * (bm * bn + bn)
                 if vmem > modes.VMEM_BYTES:
                     continue
                 mp = _round_up(m, bm)
@@ -260,15 +273,17 @@ def _conv_candidates(op: planlib.OpSpec) -> List[Candidate]:
     return out
 
 
-def candidates_for(op: planlib.OpSpec,
-                   limit: int = MAX_CANDIDATES) -> List[Tile]:
+def candidates_for(op: planlib.OpSpec, limit: int = MAX_CANDIDATES,
+                   precision: str = "fp32") -> List[Tile]:
     """The analytically-pruned candidate tiles for `op`, best-scored first
-    (what `autotune_op` actually benchmarks)."""
+    (what `autotune_op` actually benchmarks). Conv channel tilings are
+    precision-independent (the lane dim is 128 either way); dense M blocks
+    follow the precision's sublane."""
     if op.kind == "dense":
         mkn = _canonical_dense(op)
         if mkn is None:
             return []
-        cands = _dense_candidates(*mkn)
+        cands = _dense_candidates(*mkn, precision=precision)
     elif op.kind == "conv2d":
         cands = _conv_candidates(op)
     else:
@@ -294,8 +309,10 @@ def _bench_once(fn, args, repeats: int) -> float:
 
 
 def benchmark_tile(op: planlib.OpSpec, tile: Tile, cfg: EngineConfig,
-                   repeats: int = BENCH_REPEATS) -> float:
-    """Min-of-N wallclock of the real Pallas kernel for `op` at `tile`."""
+                   repeats: int = BENCH_REPEATS,
+                   precision: str = "fp32") -> float:
+    """Min-of-N wallclock of the real Pallas kernel for `op` at `tile`,
+    on the precision's actual path (quantize + int8 kernel when int8)."""
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
@@ -305,14 +322,14 @@ def benchmark_tile(op: planlib.OpSpec, tile: Tile, cfg: EngineConfig,
         x = jnp.ones((m, k), jnp.float32)
         w = jnp.ones((k, n), jnp.float32)
         fn = lambda x, w: kops.gfid_matmul(     # noqa: E731
-            x, w, tile=tile, interpret=cfg.interpret)
+            x, w, tile=tile, interpret=cfg.interpret, precision=precision)
         return _bench_once(fn, (x, w), repeats)
     if op.kind == "conv2d":
         x = jnp.ones(op.x_shape, jnp.float32)
         w = jnp.ones(op.w_shape, jnp.float32)
         fn = lambda x, w: kops.gfid_conv2d(     # noqa: E731
             x, w, stride=op.stride, pad=op.pad, groups=op.groups,
-            tile=tile, interpret=cfg.interpret)
+            tile=tile, interpret=cfg.interpret, precision=precision)
         return _bench_once(fn, (x, w), repeats)
     raise ValueError(f"op kind {op.kind!r} has no tile knob")
 
@@ -330,9 +347,10 @@ def _op_desc(op: planlib.OpSpec) -> str:
 # Resolution: lookup / autotune / attach
 # ---------------------------------------------------------------------------
 
-def lookup(op: planlib.OpSpec, cfg: EngineConfig) -> Optional[Tile]:
+def lookup(op: planlib.OpSpec, cfg: EngineConfig,
+           precision: str = "fp32") -> Optional[Tile]:
     """Cache-only tile resolution (never benchmarks; safe at trace time)."""
-    key = tile_key(op, "pallas", _accum_label(cfg))
+    key = tile_key(op, "pallas", _accum_label(cfg), precision)
     if key is None:
         return None
     entry = load_cache().get("entries", {}).get(key)
@@ -347,20 +365,22 @@ def lookup(op: planlib.OpSpec, cfg: EngineConfig) -> Optional[Tile]:
 
 
 def autotune_op(op: planlib.OpSpec, cfg: EngineConfig,
-                repeats: int = BENCH_REPEATS) -> Optional[Tile]:
+                repeats: int = BENCH_REPEATS,
+                precision: str = "fp32") -> Optional[Tile]:
     """Benchmark the pruned candidate grid for `op`, persist and return the
     winner (None when the op has no tile knob). Cached winners are reused —
     re-tuning an already-tuned op is a dict hit, not a re-benchmark."""
-    key = tile_key(op, "pallas", _accum_label(cfg))
+    key = tile_key(op, "pallas", _accum_label(cfg), precision)
     if key is None:
         return None
-    cached = lookup(op, cfg)
+    cached = lookup(op, cfg, precision)
     if cached is not None:
         return cached
-    cands = candidates_for(op)
+    cands = candidates_for(op, precision=precision)
     if not cands:
         return None
-    timed = [(benchmark_tile(op, t, cfg, repeats), t) for t in cands]
+    timed = [(benchmark_tile(op, t, cfg, repeats, precision), t)
+             for t in cands]
     best_wall, best = min(timed, key=lambda p: (p[0], p[1]))
     kind = device_kind()
     load_cache(kind)["entries"][key] = {
@@ -368,6 +388,7 @@ def autotune_op(op: planlib.OpSpec, cfg: EngineConfig,
         "tile": list(best),
         "wall_us": round(best_wall * 1e6, 1),
         "candidates": len(timed),
+        "precision": precision,
         "desc": _op_desc(op),
     }
     save_cache(kind)
@@ -387,9 +408,10 @@ def attach(op: planlib.OpSpec, plan: planlib.EnginePlan, cfg: EngineConfig,
     if (cfg.tuning == "off" or plan.backend != "pallas"
             or plan.tile_config is not None):
         return plan
-    tile = lookup(op, cfg)
+    prec = plan.precision           # pinned before tile resolution (api /
+    tile = lookup(op, cfg, prec)    # engine.compile), so the key sees it
     if tile is None and allow_autotune and cfg.tuning == "autotune":
-        tile = autotune_op(op, cfg)
+        tile = autotune_op(op, cfg, precision=prec)
     if tile is None:
         return plan
     return dataclasses.replace(plan, tile_config=tile)
@@ -403,8 +425,10 @@ def tune_program(ops: Sequence[planlib.OpSpec], cfg: EngineConfig) -> int:
     for op in ops:
         backend = (planlib.auto_backend(op, cfg.backend)
                    if cfg.policy == "auto" else cfg.backend)
-        if tile_key(op, backend, _accum_label(cfg)) is None:
+        prec = ("int8" if cfg.precision == "int8"
+                and planlib.supports_int8(op) else "fp32")
+        if tile_key(op, backend, _accum_label(cfg), prec) is None:
             continue
-        if autotune_op(op, cfg) is not None:
+        if autotune_op(op, cfg, precision=prec) is not None:
             tuned += 1
     return tuned

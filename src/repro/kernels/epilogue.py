@@ -11,8 +11,37 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 ACTS = {
     "relu": jax.nn.relu,
     "gelu": functools.partial(jax.nn.gelu, approximate=True),
 }
+
+
+def dequant_epilogue(acc_i32, scale, bias, act):
+    """Dequantize an exact int32 accumulator and fuse bias + activation.
+
+    The elementwise chain — int32→fp32 cast, bias add *in the quantized
+    domain* (`bias / scale`), then one multiply by the combined
+    (activation · weight) scale, then the activation — is pinned here and
+    shared by the Pallas int8 kernels and the xla/ref dequant paths. Same
+    inputs + same op order = bitwise-identical fp32 outputs everywhere.
+
+    The add-then-scale order is deliberate: `acc * scale + bias` contains
+    a multiply feeding an add, which LLVM contracts to an FMA inside fused
+    computations (Pallas kernel bodies, jitted nets) but not in op-by-op
+    eager execution — a last-ulp divergence that breaks bitwise parity
+    (and `optimization_barrier` / bitcast fences don't survive XLA's
+    simplifier). `(acc + bias/scale) * scale` has no fma-shaped
+    subexpression, so every execution mode rounds identically. Activations
+    like gelu contain their own fusable mul+add chains and are only
+    reproducible to ~1 ulp; relu (a max) stays exact.
+    """
+    y = acc_i32.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias / scale
+    y = y * scale
+    if act is not None:
+        y = ACTS[act](y)
+    return y

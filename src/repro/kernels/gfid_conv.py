@@ -27,8 +27,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.epilogue import ACTS
+from repro.core.quant import INT8_EXACT_K
+from repro.kernels.epilogue import ACTS, dequant_epilogue
 
 DEFAULT_CONV_TILE = (512, 256)      # (c_in_block, c_out_block)
 
@@ -123,3 +125,105 @@ def gfid_conv2d_nhwc(x: jax.Array, w: jax.Array, *, stride: int = 1,
                           act=act),
         grid=grid, in_specs=[x_spec, w_spec, b_spec], out_specs=o_spec,
         out_shape=out_shape, interpret=interpret)(x, w, bv)
+
+
+def _accumulate_int8(x_ref, w_ref, acc_ref, *, w_f: int, stride: int,
+                     w_out: int):
+    """Exact int32 accumulation of one (H_f tap, C_in block) contribution.
+
+    Mirrors `_accumulate`, but the per-tap dots run on int8 values cast to
+    fp32, chunked along C_in at INT8_EXACT_K so every fp32 partial is an
+    exactly-represented integer (< 2²⁴) — the in-kernel twin of
+    `core.quant.int8_matmul_i32`. Order-independent integer math keeps the
+    Pallas result bitwise identical to the xla/ref quantized paths."""
+    xv = x_ref[0, 0]                          # (W_in_pad, C_in_blk) int8
+    cib = xv.shape[1]
+    acc = jnp.zeros(acc_ref.shape, jnp.int32)
+    for i in range(w_f):
+        xs = jax.lax.slice(xv, (i, 0),
+                           (i + (w_out - 1) * stride + 1, cib),
+                           (stride, 1))
+        wv = w_ref[0, i]                      # (C_in_blk, cob) int8
+        for c0 in range(0, max(cib, 1), INT8_EXACT_K):
+            acc += jnp.dot(
+                xs[:, c0:c0 + INT8_EXACT_K].astype(jnp.float32),
+                wv[c0:c0 + INT8_EXACT_K, :].astype(jnp.float32),
+                preferred_element_type=jnp.float32).astype(jnp.int32)
+    acc_ref[...] += acc
+
+
+def _kernel_int8(x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref, acc_ref, *,
+                 w_f: int, stride: int, w_out: int, last_j: int,
+                 last_k: int, has_bias: bool, act: Optional[str]):
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate_int8(x_ref, w_ref, acc_ref, w_f=w_f, stride=stride,
+                     w_out=w_out)
+
+    @pl.when((j == last_j) & (k == last_k))
+    def _epilogue():
+        scale = sx_ref[...] * sw_ref[...]     # (1, 1) * (1, cob)
+        o_ref[0, 0] = dequant_epilogue(
+            acc_ref[...], scale, b_ref[...] if has_bias else None, act)
+
+
+def gfid_conv2d_nhwc_int8(xq: jax.Array, wq: jax.Array, sx: jax.Array,
+                          sw: jax.Array, *, stride: int = 1,
+                          c_in_block: int = DEFAULT_CONV_TILE[0],
+                          c_out_block: int = DEFAULT_CONV_TILE[1],
+                          bias: Optional[jax.Array] = None,
+                          act: Optional[str] = None,
+                          interpret: bool = False) -> jax.Array:
+    """int8 valid conv (pad outside). xq: (B, H_in, W_in, C_in) int8,
+    already padded (int8 zero pads are exact); wq: (H_f, W_f, C_in, C_out)
+    int8. `sx`: (B, 1) per-example activation scales; `sw`: (1, C_out)
+    per-channel weight scales. Returns (B, H_out, W_out, C_out) fp32.
+
+    Accumulates exactly in an int32 VMEM scratch across the (H_f, C_in
+    tile) grid steps and applies the fused dequant+bias+act epilogue on
+    the last step — quantized conv+bias+relu stays one kernel launch.
+    """
+    if act is not None and act not in ACTS:
+        raise ValueError(f"unknown epilogue activation {act!r}; "
+                         f"expected one of {sorted(ACTS)}")
+    b, h_in, w_in, c_in = xq.shape
+    h_f, w_f, _, c_out = wq.shape
+    h_out = (h_in - h_f) // stride + 1
+    w_out = (w_in - w_f) // stride + 1
+
+    cib = min(c_in_block, c_in)
+    cob = min(c_out_block, c_out)
+    if c_in % cib or c_out % cob:
+        cib, cob = c_in, c_out
+    n_ci, n_co = c_in // cib, c_out // cob
+
+    grid = (b, h_out, n_co, h_f, n_ci)
+    x_spec = pl.BlockSpec((1, 1, w_in, cib),
+                          lambda bi, z, co, j, k: (bi, z * stride + j, 0, k))
+    w_spec = pl.BlockSpec((1, w_f, cib, cob),
+                          lambda bi, z, co, j, k: (j, 0, k, co))
+    sx_spec = pl.BlockSpec((1, 1), lambda bi, z, co, j, k: (bi, 0))
+    sw_spec = pl.BlockSpec((1, cob), lambda bi, z, co, j, k: (0, co))
+    b_spec = pl.BlockSpec((1, cob), lambda bi, z, co, j, k: (0, co))
+    o_spec = pl.BlockSpec((1, 1, w_out, cob),
+                          lambda bi, z, co, j, k: (bi, z, 0, co))
+    has_bias = bias is not None
+    bv = (jnp.zeros((c_out,), jnp.float32) if bias is None
+          else bias.astype(jnp.float32)).reshape(1, c_out)
+    return pl.pallas_call(
+        functools.partial(_kernel_int8, w_f=w_f, stride=stride,
+                          w_out=w_out, last_j=h_f - 1, last_k=n_ci - 1,
+                          has_bias=has_bias, act=act),
+        grid=grid,
+        in_specs=[x_spec, w_spec, sx_spec, sw_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, c_out),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((w_out, cob), jnp.int32)],
+        interpret=interpret)(xq, wq, sx.astype(jnp.float32),
+                             sw.astype(jnp.float32), bv)

@@ -24,18 +24,31 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.modes import round_up as _round_up
-from repro.kernels.epilogue import ACTS
+from repro.core.quant import INT8_EXACT_K
+from repro.kernels.epilogue import ACTS, dequant_epilogue
 
 DEFAULT_TILE = (256, 512, 256)      # (bm, bk, bn) when no tuned config wins
 
 
+def sublane_for(dtype) -> int:
+    """Minimum TPU second-to-last-dim tile for `dtype`.
+
+    The (sublane × 128-lane) min tile packs 32 bytes per lane column:
+    fp32 → 8 rows, bf16 → 16, int8/fp8 → 32. Floored at 8 so wider dtypes
+    (fp64 in interpret mode) still meet the fp32 grid."""
+    return max(8, 32 // jnp.dtype(dtype).itemsize)
+
+
 def clamp_tile(m: int, k: int, n: int, bm: int, bk: int, bn: int,
-               ) -> Tuple[int, int, int]:
+               dtype=jnp.float32) -> Tuple[int, int, int]:
     """Clamp a requested (bm, bk, bn) to the MXU-aligned envelope of an
-    (M, K) @ (K, N) problem: rows to 8 (fp32 sublane), K/N to 128 (lane)."""
-    bm = max(8, min(_round_up(bm, 8), _round_up(m, 8)))
+    (M, K) @ (K, N) problem: rows to the dtype's sublane (8 for fp32, 32
+    for int8 — the old code hardcoded 8), K/N to the 128-lane tile."""
+    s = sublane_for(dtype)
+    bm = max(s, min(_round_up(bm, s), _round_up(m, s)))
     bk = max(128, min(_round_up(bk, 128), _round_up(k, 128)))
     bn = max(128, min(_round_up(bn, 128), _round_up(n, 128)))
     return bm, bk, bn
@@ -111,6 +124,91 @@ def gfid_matmul(x: jax.Array, w: jax.Array, *, bm: int = DEFAULT_TILE[0],
             functools.partial(_kernel_epilogue, nk=nk, act=act),
             grid=grid, in_specs=[x_spec, w_spec, b_spec], out_specs=o_spec,
             out_shape=out_shape, interpret=interpret)(x, w, b)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def _chunked_i32_dot(xv: jax.Array, wv: jax.Array) -> jax.Array:
+    """Exact int32 partial for an int8 (bm, bk) @ (bk, bn) block.
+
+    fp32 dots chunked at INT8_EXACT_K stay below 2²⁴ so every partial is
+    an exactly-represented integer; summing the int32 conversions is the
+    in-kernel mirror of `core.quant.int8_matmul_i32`."""
+    bk = xv.shape[-1]
+    part = None
+    for c0 in range(0, max(bk, 1), INT8_EXACT_K):
+        p = jnp.dot(xv[:, c0:c0 + INT8_EXACT_K].astype(jnp.float32),
+                    wv[c0:c0 + INT8_EXACT_K, :].astype(jnp.float32),
+                    preferred_element_type=jnp.float32).astype(jnp.int32)
+        part = p if part is None else part + p
+    return part
+
+
+def _kernel_int8(x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref, acc_ref, *,
+                 nk: int, has_bias: bool, act: Optional[str]):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _chunked_i32_dot(x_ref[...], w_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        scale = sx_ref[...] * sw_ref[...]       # (bm, 1) * (1, bn)
+        o_ref[...] = dequant_epilogue(
+            acc_ref[...], scale, b_ref[...] if has_bias else None, act)
+
+
+def gfid_matmul_int8(xq: jax.Array, wq: jax.Array, sx: jax.Array,
+                     sw: jax.Array, *, bm: int = DEFAULT_TILE[0],
+                     bk: int = DEFAULT_TILE[1], bn: int = DEFAULT_TILE[2],
+                     bias: Optional[jax.Array] = None,
+                     act: Optional[str] = None,
+                     interpret: bool = False) -> jax.Array:
+    """int8 FC mode: (M, K) int8 @ (K, N) int8 -> (M, N) fp32.
+
+    Accumulates exactly in an int32 VMEM scratch (K-chunked fp32 dots, see
+    `_chunked_i32_dot`) and applies the fused dequant+bias+act epilogue on
+    the last K step — quantized matmul+bias+relu is one kernel launch.
+
+    `sx`: (M, 1) per-row activation scales; `sw`: (1, N) per-channel weight
+    scales; both fp32. Output row/col padding is sliced back off, and the
+    padded rows/cols contribute exact zeros (int8 zero pads, scale·0 = 0).
+    """
+    if act is not None and act not in ACTS:
+        raise ValueError(f"unknown epilogue activation {act!r}; "
+                         f"expected one of {sorted(ACTS)}")
+    m, k = xq.shape
+    _, n = wq.shape
+    bm, bk, bn = clamp_tile(m, k, n, bm, bk, bn, dtype=xq.dtype)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    if (mp, kp) != (m, k):
+        xq = jnp.pad(xq, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        wq = jnp.pad(wq, ((0, kp - k), (0, np_ - n)))
+    sx = jnp.pad(sx.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    sw = jnp.pad(sw.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    has_bias = bias is not None
+    b = jnp.zeros((n,), jnp.float32) if bias is None else \
+        bias.astype(jnp.float32)
+    b = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel_int8, nk=grid[2], has_bias=has_bias,
+                          act=act),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+                  pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+                  pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+                  pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret)(xq, wq, sx, sw, b)
     if (mp, np_) != (m, n):
         out = out[:m, :n]
     return out

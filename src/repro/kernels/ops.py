@@ -14,6 +14,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.kernels import conv1d as _conv1d
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gfid_conv as _conv
@@ -24,12 +25,18 @@ from repro.kernels import paged as _paged
 def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
                 groups: int = 1, tile: Optional[Tuple[int, int]] = None,
                 bias: Optional[jax.Array] = None, act: Optional[str] = None,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool = True,
+                precision: str = "fp32") -> jax.Array:
     """NHWC x HWIO conv through the multi-mode engine's conv mode.
 
     `tile` is the (c_in_block, c_out_block) channel tiling (None keeps the
     kernel default; `engine.tune` passes per-layer winners). `bias` (C_out,)
     and `act` ("relu" | "gelu") run as a fused in-kernel epilogue.
+
+    `precision="int8"` quantizes both operands symmetrically (per-example
+    activation scales, per-channel weight scales), runs the int8 kernel
+    with an exact int32 VMEM accumulator, and fuses dequant+bias+act into
+    the same epilogue writeback — still one kernel launch.
 
     Grouped convolution (AlexNet's historical 2-group layers) runs as ONE
     batched kernel call: the group axis is stacked in front of x and w and
@@ -37,6 +44,10 @@ def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
     the old eager Python loop that emitted `groups` separate kernel launches
     plus a concatenate.
     """
+    if precision == "int8":
+        return _gfid_conv2d_int8(x, w, stride=stride, pad=pad, groups=groups,
+                                 tile=tile, bias=bias, act=act,
+                                 interpret=interpret)
     cib, cob = tile if tile is not None else _conv.DEFAULT_CONV_TILE
     if pad:
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
@@ -68,19 +79,70 @@ def gfid_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
         b, outs.shape[2], outs.shape[3], c_out).astype(x.dtype)
 
 
+def _gfid_conv2d_int8(x: jax.Array, w: jax.Array, *, stride: int, pad: int,
+                      groups: int, tile: Optional[Tuple[int, int]],
+                      bias: Optional[jax.Array], act: Optional[str],
+                      interpret: bool) -> jax.Array:
+    """int8 conv mode: quantize (before padding — scales must not see the
+    zero pad), pad in int8 (exact zeros), run the int32-accumulator kernel
+    with the fused dequant epilogue."""
+    cib, cob = tile if tile is not None else _conv.DEFAULT_CONV_TILE
+    xq, wq, sx, sw = quant.quantize_conv_operands(x, w)
+    if pad:
+        xq = jnp.pad(xq, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    b = x.shape[0]
+    sx2 = sx.reshape(b, 1)                       # (B, 1) for the kernel
+    h_f, w_f, cg, c_out = w.shape
+    if groups == 1:
+        out = _conv.gfid_conv2d_nhwc_int8(
+            xq, wq, sx2, sw.reshape(1, c_out), stride=stride,
+            c_in_block=cib, c_out_block=cob, bias=bias, act=act,
+            interpret=interpret)
+        return out.astype(x.dtype)
+    og = c_out // groups
+    h_in, w_in = xq.shape[1], xq.shape[2]
+    xg = jnp.moveaxis(xq.reshape(b, h_in, w_in, groups, cg), 3, 0)
+    wg = jnp.moveaxis(wq.reshape(h_f, w_f, cg, groups, og), 3, 0)
+    swg = sw.reshape(groups, 1, og)              # (G, 1, og) per-group rows
+    bg = None if bias is None else bias.astype(jnp.float32).reshape(
+        groups, og)
+    if bg is None:
+        outs = jax.vmap(
+            lambda xv, wv, sv: _conv.gfid_conv2d_nhwc_int8(
+                xv, wv, sx2, sv, stride=stride, c_in_block=cib,
+                c_out_block=cob, act=act, interpret=interpret))(xg, wg, swg)
+    else:
+        outs = jax.vmap(
+            lambda xv, wv, sv, bv: _conv.gfid_conv2d_nhwc_int8(
+                xv, wv, sx2, sv, stride=stride, c_in_block=cib,
+                c_out_block=cob, bias=bv, act=act,
+                interpret=interpret))(xg, wg, swg, bg)
+    return jnp.moveaxis(outs, 0, 3).reshape(
+        b, outs.shape[2], outs.shape[3], c_out).astype(x.dtype)
+
+
 def gfid_matmul(x: jax.Array, w: jax.Array, *,
                 tile: Optional[Tuple[int, int, int]] = None,
                 bias: Optional[jax.Array] = None, act: Optional[str] = None,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool = True,
+                precision: str = "fp32") -> jax.Array:
     """(..., K) @ (K, N) through the FC mode.
 
     `tile` is the (bm, bk, bn) GEMM blocking (None keeps the kernel
-    default); `bias` (N,) and `act` run as a fused in-kernel epilogue."""
+    default); `bias` (N,) and `act` run as a fused in-kernel epilogue.
+    `precision="int8"` quantizes per-row (x) / per-column (w) and runs the
+    exact-int32-accumulator kernel with the fused dequant epilogue."""
     bm, bk, bn = tile if tile is not None else _matmul.DEFAULT_TILE
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    out = _matmul.gfid_matmul(x2, w, bm=bm, bk=bk, bn=bn, bias=bias,
-                              act=act, interpret=interpret)
+    if precision == "int8":
+        xq, wq, sx, sw = quant.quantize_matmul_operands(x2, w)
+        out = _matmul.gfid_matmul_int8(xq, wq, sx, sw, bm=bm, bk=bk, bn=bn,
+                                       bias=bias, act=act,
+                                       interpret=interpret)
+    else:
+        out = _matmul.gfid_matmul(x2, w, bm=bm, bk=bk, bn=bn, bias=bias,
+                                  act=act, interpret=interpret)
     return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 

@@ -214,40 +214,75 @@ def _maxpool(x: jax.Array, k: int) -> jax.Array:
                                  (1, k, k, 1), (1, k, k, 1), "VALID")
 
 
-def _forward(net: CNNDef, params: Dict, x: jax.Array) -> jax.Array:
+def _layer_names(net: CNNDef) -> set:
+    if net.kind == "plain":
+        names = {cd.name for cd in net.convs}
+    else:
+        convs, _ = analytics_layers(net.name, main_path_only=False)
+        names = {c.name for c in convs}
+    return names | {fd.name for fd in net.fcs}
+
+
+def _check_precisions(net: CNNDef,
+                      precisions: Optional[Dict[str, str]]) -> None:
+    if precisions is None:
+        return
+    unknown = set(precisions) - _layer_names(net)
+    if unknown:
+        raise ValueError(
+            f"unknown layer name(s) {sorted(unknown)} in precisions for "
+            f"{net.name!r}")
+
+
+def _prec(precisions: Optional[Dict[str, str]], name: str) -> Optional[str]:
+    return None if precisions is None else precisions.get(name)
+
+
+def _forward(net: CNNDef, params: Dict, x: jax.Array,
+             precisions: Optional[Dict[str, str]] = None) -> jax.Array:
     """The functional forward pass, engine-routed, context-free — shared by
     eager `apply_cnn` and the compiled `program(...)` path.
 
     Bias and ReLU ride each conv/FC op as the engine's fused epilogue: a
     conv+bias+relu layer is ONE kernel launch on the Pallas backend
-    (epilogue applied in the fp32 accumulator) instead of three ops."""
+    (epilogue applied in the accumulator — fp32, or int32-with-fused-
+    dequant on the int8 path) instead of three ops. `precisions` maps
+    layer names to explicit per-layer precision overrides ("fp32" |
+    "int8"); an entry wins over the ambient config AND over a compiled
+    plan's pinned precision, the same way an explicit `backend=` argument
+    wins at the engine API."""
     if net.kind == "plain":
         for cd in net.convs:
             p = params["conv"][cd.name]
             x = E.conv2d(x, p["w"], stride=cd.stride, pad=cd.pad,
                          groups=cd.groups, bias=p["b"],
-                         act="relu" if cd.relu else None)
+                         act="relu" if cd.relu else None,
+                         precision=_prec(precisions, cd.name))
             if cd.pool > 1:
                 x = _maxpool(x, cd.pool)
         x = x.reshape(x.shape[0], -1)
     else:
-        x = _resnet50_body(params, x)
+        x = _resnet50_body(params, x, precisions)
         x = x.mean(axis=(1, 2))         # global average pool
     for fd in net.fcs:
         p = params["fc"][fd.name]
         x = E.matmul(x, p["w"], bias=p["b"],
-                     act="relu" if fd.relu else None)
+                     act="relu" if fd.relu else None,
+                     precision=_prec(precisions, fd.name))
     return x
 
 
 def apply_cnn(name: str, params: Dict, x: jax.Array,
               engine=None, *, backend: Optional[str] = None,
-              config: Optional[E.EngineConfig] = None) -> jax.Array:
+              config: Optional[E.EngineConfig] = None,
+              precisions: Optional[Dict[str, str]] = None) -> jax.Array:
     """Eager forward pass through the multi-mode engine. x: (B, H, W, 3) ->
     logits (B, 1000).
 
     `config` threads a full `engine.EngineConfig`; `backend` is the compat
-    shim selecting just the engine backend ("pallas" | "xla" | "ref"); wrap
+    shim selecting just the engine backend ("pallas" | "xla" | "ref");
+    `precisions` maps layer names to per-layer precision overrides (e.g.
+    ``{"fc6": "int8"}`` — wins over the config's `precision`); wrap
     the call in `E.tracking()` to collect the MMIE analytics ledger. The
     `engine` argument still accepts a legacy `core.MultiModeEngine` (its
     backend and ledger are honored) but is deprecated. For the jitted,
@@ -262,14 +297,17 @@ def apply_cnn(name: str, params: Dict, x: jax.Array,
     if config is not None and backend is not None:
         raise ValueError("pass config or backend (or a legacy engine), "
                          "not both")
+    net = CNNS[name]
+    _check_precisions(net, precisions)
     ctx = E.using_config(config) if config is not None \
         else E.using_backend(backend)
     with track, ctx:
-        return _forward(CNNS[name], params, x)
+        return _forward(net, params, x, precisions)
 
 
 def program(name: str, *, batch: int = 1, dtype=jnp.float32,
-            main_path_only: bool = True) -> E.Program:
+            main_path_only: bool = True,
+            precisions: Optional[Dict[str, str]] = None) -> E.Program:
     """The network as an `engine.Program`: an ordered, shape-complete op
     graph derived from the `CNNDef` layer tables, plus the executable
     functional forward.
@@ -287,8 +325,14 @@ def program(name: str, *, batch: int = 1, dtype=jnp.float32,
     `engine.compile(program(net).with_batch(B), cfg).apply(params, xB)` —
     re-planned, never re-traced; the `serve.scheduler` uses exactly this to
     pack requests into batch buckets.
+
+    `precisions` bakes per-layer precision overrides into the program's
+    forward: the named layers issue an explicit `precision=` at every
+    execution, which wins over the compile config's `precision` the same
+    way an explicit backend pin wins over the planned backend.
     """
     net = CNNS[name]
+    _check_precisions(net, precisions)
     h, w, c = net.input_hw_c
     conv_specs, fc_specs = analytics_layers(name, main_path_only)
     ops: List[E.OpSpec] = []
@@ -305,7 +349,8 @@ def program(name: str, *, batch: int = 1, dtype=jnp.float32,
     params_avals = jax.eval_shape(
         lambda key: init_cnn(name, key, dtype), jax.random.PRNGKey(0))
     x_aval = jax.ShapeDtypeStruct((batch, h, w, c), dtype)
-    fn = functools.partial(_forward, net)
+    fn = (functools.partial(_forward, net) if precisions is None
+          else functools.partial(_forward, net, precisions=dict(precisions)))
     batch_axes = E.infer_batch_axes(
         (params_avals, x_aval),
         (params_avals, jax.ShapeDtypeStruct((batch + 1, h, w, c), dtype)))
@@ -314,14 +359,15 @@ def program(name: str, *, batch: int = 1, dtype=jnp.float32,
                      batch_size=batch, batch_axes=batch_axes)
 
 
-def _resnet50_body(params: Dict, x: jax.Array) -> jax.Array:
+def _resnet50_body(params: Dict, x: jax.Array,
+                   precisions: Optional[Dict[str, str]] = None) -> jax.Array:
     pc = params["conv"]
 
     def conv(nm, x, stride, pad, act=None):
         # bias (and relu where it directly follows) fused into the engine op
         p = pc[nm]
         return E.conv2d(x, p["w"], stride=stride, pad=pad, bias=p["b"],
-                        act=act)
+                        act=act, precision=_prec(precisions, nm))
 
     x = conv("conv1", x, 2, 3, act="relu")
     x = _maxpool(jnp.pad(x, ((0, 0), (0, 1), (0, 1), (0, 0)),

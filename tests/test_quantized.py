@@ -1,0 +1,623 @@
+"""The int8 quantized multi-mode path (PR 8).
+
+Covers the quantization contract end to end: the pinned rounding rule
+(half-away-from-zero, the paper's add-half-LSB-and-truncate datapath) on
+the Q13.2 / Q0.15 fixed-point grids and the int8 grid, jit/eager scale
+determinism (the strength-reduction regression), dtype-aware tile
+clamping, three-backend bitwise parity of the quantized dense/conv ops,
+precision resolution through `engine.api` (explicit kwarg > replayed plan
+> ambient config), compile/serve end-to-end under
+``EngineConfig(precision="int8")``, per-layer precision overrides in
+`models.cnn`, int8-vs-fp32 SNR goldens, the autotuner's precision-keyed
+tiles, and the plan's halved `exec_ma_words` bookkeeping.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.core import quant
+from repro.engine import tune
+from repro.kernels import gfid_matmul as MK
+from repro.models import cnn
+from repro.serve import scheduler as SCH
+
+jax.config.update("jax_platform_name", "cpu")
+
+BACKENDS = ("xla", "ref", "pallas")
+
+
+@pytest.fixture()
+def tune_dir(tmp_path):
+    tune.set_cache_dir(tmp_path)
+    yield tmp_path
+    tune.set_cache_dir(None)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Rounding semantics: half-away-from-zero, pinned (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+class TestRounding:
+    def test_half_away_differs_from_bankers(self):
+        x = jnp.array([0.5, 1.5, 2.5, -0.5, -1.5, -2.5], jnp.float32)
+        got = quant.round_half_away(x)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      [1.0, 2.0, 3.0, -1.0, -2.0, -3.0])
+        # jnp.round is half-to-even; the conventions disagree at every
+        # odd half — this difference is exactly what the docstring pins
+        banker = jnp.round(x)
+        assert not np.array_equal(np.asarray(got), np.asarray(banker))
+
+    def test_q13_2_midpoints(self):
+        # Q13.2 grid step 0.25: 0.375 is a midpoint. Half-away gives 0.5;
+        # jnp.round's half-to-even would give 0.25.
+        x = jnp.array([0.375, -0.375, 0.125, -0.125], jnp.float32)
+        got = quant.quantize(x, quant.ACT_FORMAT)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      [0.5, -0.5, 0.25, -0.25])
+
+    def test_q0_15_midpoints(self):
+        s = quant.WEIGHT_FORMAT.scale            # 2^15
+        x = jnp.array([1.5 / s, -1.5 / s, 2.5 / s], jnp.float32)
+        got = quant.quantize(x, quant.WEIGHT_FORMAT)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray([2.0, -2.0, 3.0]) / s)
+
+    @pytest.mark.parametrize("fmt", [quant.ACT_FORMAT, quant.WEIGHT_FORMAT])
+    def test_saturation(self, fmt):
+        big = jnp.array([1e9, -1e9], jnp.float32)
+        got = quant.quantize(big, fmt)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray([fmt.max_int, fmt.min_int], np.float32) / fmt.scale)
+
+    @pytest.mark.parametrize("fmt", [quant.ACT_FORMAT, quant.WEIGHT_FORMAT])
+    def test_in_range_error_at_most_half_lsb(self, fmt):
+        lim = fmt.max_int / fmt.scale * 0.9
+        x = jax.random.uniform(jax.random.PRNGKey(3), (2048,), jnp.float32,
+                               -lim, lim)
+        err = jnp.abs(quant.quantize(x, fmt) - x)
+        assert float(jnp.max(err)) <= 0.5 / fmt.scale + 1e-7
+
+    def test_int8_grid_rounding_and_clip(self):
+        s = jnp.float32(0.5)
+        x = jnp.array([0.25, -0.25, 63.75, 1000.0, -1000.0], jnp.float32)
+        q = quant.quantize_int8(x, s)
+        assert q.dtype == jnp.int8
+        # 0.25/0.5 = 0.5 -> half-away -> 1; clip at the symmetric ±127
+        np.testing.assert_array_equal(np.asarray(q), [1, -1, 127, 127, -127])
+
+    def test_all_zero_slice_gets_unit_scale(self):
+        x = jnp.zeros((4, 8), jnp.float32)
+        s = quant.symmetric_scale(x, axis=-1)
+        np.testing.assert_array_equal(np.asarray(s), np.ones((4, 1)))
+        assert not np.any(np.isnan(np.asarray(quant.quantize_int8(x, s))))
+
+
+# ---------------------------------------------------------------------------
+# Scale determinism and batch invariance
+# ---------------------------------------------------------------------------
+
+
+class TestScales:
+    def test_scale_jit_eager_bitwise(self):
+        # regression: `absmax / 127` is strength-reduced to a reciprocal
+        # multiply by XLA under jit but executed as a true divide eagerly,
+        # so the literal divide gave jit and eager last-ulp-different
+        # scales. The scale is now *defined* as absmax * (1/127).
+        x = _rand((16, 64), seed=7)
+        eager = quant.symmetric_scale(x, axis=-1)
+        jitted = jax.jit(lambda v: quant.symmetric_scale(v, axis=-1))(x)
+        np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+
+    def test_row_scales_batch_invariant(self):
+        xs = [_rand((1, 32), seed=i) for i in range(4)]
+        batch = jnp.concatenate(xs, axis=0)
+        w = _rand((32, 8), seed=99)
+        xq_b, _, sx_b, _ = quant.quantize_matmul_operands(batch, w)
+        for i, x in enumerate(xs):
+            xq, _, sx, _ = quant.quantize_matmul_operands(x, w)
+            np.testing.assert_array_equal(np.asarray(sx_b[i:i + 1]),
+                                          np.asarray(sx))
+            np.testing.assert_array_equal(np.asarray(xq_b[i:i + 1]),
+                                          np.asarray(xq))
+
+    def test_int8_matmul_i32_exact_across_chunk_edge(self):
+        # K just past INT8_EXACT_K forces two chunks; the chunked fp32
+        # path must equal the (slow) native int32 contraction exactly
+        k = quant.INT8_EXACT_K + 8
+        xq = (jax.random.randint(jax.random.PRNGKey(0), (4, k), -127, 128)
+              .astype(jnp.int8))
+        wq = (jax.random.randint(jax.random.PRNGKey(1), (k, 16), -127, 128)
+              .astype(jnp.int8))
+        got = quant.int8_matmul_i32(xq, wq)
+        want = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware tile clamping + small-M int8 kernels (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+class TestTileClamping:
+    def test_sublane_per_dtype(self):
+        assert MK.sublane_for(jnp.float32) == 8
+        assert MK.sublane_for(jnp.int8) == 32
+
+    def test_fp32_positional_compat(self):
+        # pre-int8 call sites pass six positionals; dtype must default fp32
+        bm, bk, bn = MK.clamp_tile(64, 256, 512, 128, 1024, 1024)
+        assert bm % 8 == 0 and bm >= 64
+
+    def test_int8_tiles_align_to_32_rows(self):
+        bm, _, _ = MK.clamp_tile(64, 256, 512, 8, 256, 512, jnp.int8)
+        assert bm % 32 == 0
+        bm_small, _, _ = MK.clamp_tile(3, 256, 512, 128, 256, 512, jnp.int8)
+        assert bm_small % 32 == 0 and bm_small >= 3
+
+    @pytest.mark.parametrize("m", [1, 3, 10])
+    def test_small_m_int8_matches_xla(self, m):
+        # M below / not divisible by the 32-row int8 sublane: padded rows
+        # must contribute exact zeros and slice back off
+        x, w = _rand((m, 96), seed=m), _rand((96, 40), seed=50)
+        b = _rand((40,), seed=51)
+        got = E.matmul(x, w, bias=b, act="relu", precision="int8",
+                       backend="pallas", interpret=True)
+        want = E.matmul(x, w, bias=b, act="relu", precision="int8",
+                        backend="xla")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Three-backend bitwise parity of the quantized ops
+# ---------------------------------------------------------------------------
+
+
+class TestBackendParity:
+    def test_dense_bitwise(self):
+        x, w = _rand((8, 96), seed=1), _rand((96, 40), seed=2)
+        b = _rand((40,), seed=3)
+        outs = [E.matmul(x, w, bias=b, act="relu", precision="int8",
+                         backend=bk, interpret=True) for bk in BACKENDS]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(outs[0]),
+                                          np.asarray(o))
+
+    def test_conv_bitwise_stride_pad_groups(self):
+        x, w = _rand((2, 8, 8, 4), seed=4), _rand((3, 3, 2, 8), seed=5)
+        b = _rand((8,), seed=6)
+        outs = [E.conv2d(x, w, stride=2, pad=1, groups=2, bias=b,
+                         act="relu", precision="int8", backend=bk,
+                         interpret=True) for bk in BACKENDS]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(outs[0]),
+                                          np.asarray(o))
+
+    def test_dense_jit_eager_bitwise(self):
+        x, w = _rand((8, 96), seed=1), _rand((96, 40), seed=2)
+        f = lambda a, b: E.matmul(a, b, precision="int8", backend="xla")
+        np.testing.assert_array_equal(np.asarray(f(x, w)),
+                                      np.asarray(jax.jit(f)(x, w)))
+
+    def test_conv_jit_eager_bitwise(self):
+        x, w = _rand((2, 8, 8, 4), seed=4), _rand((3, 3, 4, 8), seed=5)
+        f = lambda a, b: E.conv2d(a, b, pad=1, precision="int8",
+                                  backend="xla")
+        np.testing.assert_array_equal(np.asarray(f(x, w)),
+                                      np.asarray(jax.jit(f)(x, w)))
+
+
+# ---------------------------------------------------------------------------
+# Precision resolution through engine.api
+# ---------------------------------------------------------------------------
+
+
+class TestPrecisionResolution:
+    def test_explicit_kwarg_wins_over_config(self):
+        x, w = _rand((4, 32), seed=8), _rand((32, 16), seed=9)
+        want = E.matmul(x, w, precision="int8")
+        with E.using_config(E.EngineConfig(precision="fp32")):
+            got = E.matmul(x, w, precision="int8")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert not np.array_equal(np.asarray(got),
+                                  np.asarray(E.matmul(x, w)))
+
+    def test_config_precision_is_ambient(self):
+        x, w = _rand((4, 32), seed=8), _rand((32, 16), seed=9)
+        with E.using_config(E.EngineConfig(precision="int8")):
+            got = E.matmul(x, w)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(E.matmul(x, w, precision="int8")))
+
+    def test_unknown_precision_raises(self):
+        x, w = _rand((4, 32)), _rand((32, 16))
+        with pytest.raises(ValueError, match="unknown precision"):
+            E.matmul(x, w, precision="int4")
+
+    def test_explicit_int8_on_uncovered_op_raises(self):
+        # batched-weight einsum (MoE-style) is outside the int8 contract
+        x, w = _rand((3, 4, 8)), _rand((3, 8, 5))
+        with pytest.raises(ValueError, match="int8 contract"):
+            E.einsum("ecd,edf->ecf", x, w, precision="int8")
+
+    def test_config_int8_downgrades_uncovered_op_silently(self):
+        x, w = _rand((3, 4, 8)), _rand((3, 8, 5))
+        want = E.einsum("ecd,edf->ecf", x, w)
+        with E.using_config(E.EngineConfig(precision="int8")):
+            got = E.einsum("ecd,edf->ecf", x, w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_supports_int8(self):
+        conv = E.OpSpec("conv2d", (1, 8, 8, 4), (3, 3, 4, 8), stride=1,
+                        pad=1)
+        dense = E.OpSpec("dense", (4, 32), (32, 16), spec=E.dense_spec(2))
+        moe = E.OpSpec("dense", (3, 4, 8), (3, 8, 5), spec="ecd,edf->ecf")
+        dw = E.OpSpec("conv1d_dw", (1, 16, 8), (4, 8))
+        assert E.supports_int8(conv) and E.supports_int8(dense)
+        assert not E.supports_int8(moe) and not E.supports_int8(dw)
+
+    def test_with_precision_downgrades(self):
+        moe = E.OpSpec("dense", (3, 4, 8), (3, 8, 5), spec="ecd,edf->ecf")
+        plan = E.plan_op(moe, "xla")
+        assert E.with_precision(plan, moe, "int8").precision == "fp32"
+        dense = E.OpSpec("dense", (4, 32), (32, 16), spec=E.dense_spec(2))
+        plan = E.plan_op(dense, "xla")
+        assert E.with_precision(plan, dense, "int8").precision == "int8"
+
+
+# ---------------------------------------------------------------------------
+# compile / serve end-to-end under precision="int8"
+# ---------------------------------------------------------------------------
+
+
+def _fc_program(dims=(96, 64, 40), batch=4, name="qfc"):
+    def fn(w, x):
+        h = E.dense(x, w["w1"], bias=w["b1"], act="relu")
+        return E.dense(h, w["w2"], bias=w["b2"])
+
+    def avals(b):
+        return ({"w1": jax.ShapeDtypeStruct((dims[0], dims[1]), jnp.float32),
+                 "b1": jax.ShapeDtypeStruct((dims[1],), jnp.float32),
+                 "w2": jax.ShapeDtypeStruct((dims[1], dims[2]), jnp.float32),
+                 "b2": jax.ShapeDtypeStruct((dims[2],), jnp.float32)},
+                jax.ShapeDtypeStruct((b, dims[0]), jnp.float32))
+
+    return E.trace_program(fn, *avals(batch), name=name, batch_size=batch,
+                           batch_axes=E.infer_batch_axes(avals(batch),
+                                                         avals(batch + 1)))
+
+
+def _fc_weights(dims=(96, 64, 40), seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {"w1": jax.random.normal(ks[0], (dims[0], dims[1]), jnp.float32),
+            "b1": jax.random.normal(ks[1], (dims[1],), jnp.float32),
+            "w2": jax.random.normal(ks[2], (dims[1], dims[2]), jnp.float32),
+            "b2": jax.random.normal(ks[3], (dims[2],), jnp.float32)}
+
+
+def _conv_program(batch=2, name="qconv"):
+    def fn(w, x):
+        h = E.conv2d(x, w["c1"], pad=1, bias=w["cb1"], act="relu")
+        h = E.conv2d(h, w["c2"], stride=2, pad=1, bias=w["cb2"], act="relu")
+        h = h.reshape(h.shape[0], -1)
+        return E.dense(h, w["fc"], bias=w["fb"])
+
+    def avals(b):
+        return ({"c1": jax.ShapeDtypeStruct((3, 3, 4, 8), jnp.float32),
+                 "cb1": jax.ShapeDtypeStruct((8,), jnp.float32),
+                 "c2": jax.ShapeDtypeStruct((3, 3, 8, 16), jnp.float32),
+                 "cb2": jax.ShapeDtypeStruct((16,), jnp.float32),
+                 "fc": jax.ShapeDtypeStruct((4 * 4 * 16, 10), jnp.float32),
+                 "fb": jax.ShapeDtypeStruct((10,), jnp.float32)},
+                jax.ShapeDtypeStruct((b, 8, 8, 4), jnp.float32))
+
+    return E.trace_program(fn, *avals(batch), name=name, batch_size=batch,
+                           batch_axes=E.infer_batch_axes(avals(batch),
+                                                         avals(batch + 1)))
+
+
+def _conv_weights(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    return {"c1": jax.random.normal(ks[0], (3, 3, 4, 8), jnp.float32),
+            "cb1": jax.random.normal(ks[1], (8,), jnp.float32),
+            "c2": jax.random.normal(ks[2], (3, 3, 8, 16), jnp.float32),
+            "cb2": jax.random.normal(ks[3], (16,), jnp.float32),
+            "fc": jax.random.normal(ks[4], (4 * 4 * 16, 10), jnp.float32),
+            "fb": jax.random.normal(ks[5], (10,), jnp.float32)}
+
+
+ALEXNET_FC_DIMS = (9216, 4096, 4096, 1000)
+
+
+def _alexnet_fc_program(batch=4):
+    """The real AlexNet FC stack (fc6/fc7/fc8 dims) as a traced program."""
+    d = ALEXNET_FC_DIMS
+
+    def fn(w, x):
+        h = E.dense(x, w["w1"], bias=w["b1"], act="relu")
+        h = E.dense(h, w["w2"], bias=w["b2"], act="relu")
+        return E.dense(h, w["w3"], bias=w["b3"])
+
+    def avals(b):
+        return ({"w1": jax.ShapeDtypeStruct((d[0], d[1]), jnp.float32),
+                 "b1": jax.ShapeDtypeStruct((d[1],), jnp.float32),
+                 "w2": jax.ShapeDtypeStruct((d[1], d[2]), jnp.float32),
+                 "b2": jax.ShapeDtypeStruct((d[2],), jnp.float32),
+                 "w3": jax.ShapeDtypeStruct((d[2], d[3]), jnp.float32),
+                 "b3": jax.ShapeDtypeStruct((d[3],), jnp.float32)},
+                jax.ShapeDtypeStruct((b, d[0]), jnp.float32))
+
+    return E.trace_program(fn, *avals(batch), name="alexnet_fc",
+                           batch_size=batch,
+                           batch_axes=E.infer_batch_axes(avals(batch),
+                                                         avals(batch + 1)))
+
+
+def _alexnet_fc_weights(seed=0):
+    d = ALEXNET_FC_DIMS
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    w = {}
+    for i in range(3):
+        fan_in = d[i]
+        w[f"w{i+1}"] = (jax.random.normal(ks[2 * i], (d[i], d[i + 1]),
+                                          jnp.float32)
+                        * np.sqrt(2.0 / fan_in).astype(np.float32))
+        w[f"b{i+1}"] = jax.random.normal(ks[2 * i + 1], (d[i + 1],),
+                                         jnp.float32) * 0.1
+    return w
+
+
+class TestCompiledInt8:
+    @pytest.mark.parametrize("prog_fn,w_fn,x_shape", [
+        (_fc_program, _fc_weights, (4, 96)),
+        (_conv_program, _conv_weights, (2, 8, 8, 4)),
+    ])
+    def test_three_backend_compile_bitwise(self, prog_fn, w_fn, x_shape):
+        prog, w = prog_fn(), w_fn()
+        x = _rand(x_shape, seed=20)
+        outs, precs = [], []
+        for bk in BACKENDS:
+            net = E.compile(prog, E.EngineConfig(
+                backend=bk, interpret=True, precision="int8"))
+            outs.append(np.asarray(net.apply(w, x)))
+            precs.append(net.precisions())
+        for p in precs:
+            assert all(v == "int8" for v in p), p
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+    def test_compile_matches_eager_int8(self):
+        # regression for replay precision pinning: the compiled replay
+        # path must resolve each op to the same precision the eager
+        # ambient-config path does
+        prog, w = _conv_program(), _conv_weights()
+        x = _rand((2, 8, 8, 4), seed=21)
+        cfg = E.EngineConfig(backend="pallas", interpret=True,
+                             precision="int8")
+        net = E.compile(prog, cfg)
+        with E.using_config(cfg):
+            want = prog.fn(w, x)
+        np.testing.assert_array_equal(np.asarray(net.apply(w, x)),
+                                      np.asarray(want))
+
+    def test_alexnet_fc_end_to_end_int8(self):
+        # the acceptance workload: real AlexNet FC dims through
+        # compile() under precision="int8", fused dequant epilogues,
+        # pallas bitwise against xla
+        prog, w = _alexnet_fc_program(), _alexnet_fc_weights()
+        x = _rand((4, ALEXNET_FC_DIMS[0]), seed=22, scale=0.5)
+        nets = {bk: E.compile(prog, E.EngineConfig(
+            backend=bk, interpret=True, precision="int8"))
+            for bk in ("pallas", "xla")}
+        assert nets["pallas"].precisions() == ("int8",) * 3
+        got = {bk: np.asarray(net.apply(w, x)) for bk, net in nets.items()}
+        np.testing.assert_array_equal(got["pallas"], got["xla"])
+
+    def test_scheduler_parity_int8(self):
+        # batch-invariant per-example scales are what make the quantized
+        # path safe under the scheduler's batch packing: any request's
+        # result is bitwise the batch-1 result, whatever bucket it rode in
+        prog, w = _fc_program(batch=1), _fc_weights()
+        cfg = E.EngineConfig(row_align=8, precision="int8")
+        sched = SCH.Scheduler(config=cfg, max_batch=4)
+        sched.register("qfc", prog, shared_args=(w,))
+        xs = [_rand((1, 96), seed=30 + i) for i in range(6)]
+        tickets = [sched.submit("qfc", x) for x in xs]
+        sched.drain()
+        alone = E.compile(prog, cfg)
+        assert alone.precisions() == ("int8", "int8")
+        for t, x in zip(tickets, xs):
+            np.testing.assert_array_equal(np.asarray(t.result),
+                                          np.asarray(alone.apply(w, x)))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer precision overrides in models.cnn
+# ---------------------------------------------------------------------------
+
+
+class TestPerLayerOverrides:
+    def test_unknown_layer_name_raises(self):
+        params = cnn.init_cnn("alexnet", jax.random.PRNGKey(0))
+        h, w, c = cnn.CNNS["alexnet"].input_hw_c
+        x = _rand((1, h, w, c), seed=1, scale=0.1)
+        with pytest.raises(ValueError, match="unknown layer"):
+            cnn.apply_cnn("alexnet", params, x,
+                          precisions={"fc9": "int8"})
+        with pytest.raises(ValueError):
+            cnn.program("alexnet", precisions={"nope": "int8"})
+
+    def test_program_override_pins_one_layer(self):
+        prog = cnn.program("alexnet", precisions={"fc6": "int8"})
+        net = E.compile(prog, E.EngineConfig())
+        precs = net.precisions()
+        assert precs.count("int8") == 1
+        # and the baked-in override survives execution: the forward runs
+        # (single fp32-vs-int8 layer difference -> outputs differ)
+        params = cnn.init_cnn("alexnet", jax.random.PRNGKey(0))
+        h, w, c = cnn.CNNS["alexnet"].input_hw_c
+        x = _rand((1, h, w, c), seed=2, scale=0.1)
+        y_mixed = np.asarray(net.apply(params, x))
+        y_fp32 = np.asarray(
+            E.compile(cnn.program("alexnet"), E.EngineConfig())
+            .apply(params, x))
+        assert y_mixed.shape == y_fp32.shape
+        assert not np.array_equal(y_mixed, y_fp32)
+
+
+# ---------------------------------------------------------------------------
+# SNR goldens: int8 vs fp32 forwards
+# ---------------------------------------------------------------------------
+
+
+class TestSNRGoldens:
+    def _snr(self, fn, *args):
+        fp32 = fn(*args, precision=None)
+        int8 = fn(*args, precision="int8")
+        return float(quant.snr_db(fp32, int8))
+
+    def test_alexnet_fc_snr(self):
+        prog, w = _alexnet_fc_program(), _alexnet_fc_weights()
+        x = _rand((4, ALEXNET_FC_DIMS[0]), seed=40, scale=0.5)
+
+        def run(precision=None):
+            cfg = E.EngineConfig(precision=precision or "fp32")
+            return E.compile(prog, cfg).apply(w, x)
+
+        snr = float(quant.snr_db(run(), run(precision="int8")))
+        assert snr >= 30.0, f"AlexNet-FC int8 SNR {snr:.1f} dB < 30"
+
+    def test_conv_net_snr(self):
+        prog, w = _conv_program(), _conv_weights()
+        x = _rand((2, 8, 8, 4), seed=41)
+
+        def run(precision=None):
+            cfg = E.EngineConfig(precision=precision or "fp32")
+            return E.compile(prog, cfg).apply(w, x)
+
+        snr = float(quant.snr_db(run(), run(precision="int8")))
+        assert snr >= 30.0, f"conv-net int8 SNR {snr:.1f} dB < 30"
+
+    def test_resnet50_forward_snr(self):
+        params = cnn.init_cnn("resnet50", jax.random.PRNGKey(0))
+        h, w, c = cnn.CNNS["resnet50"].input_hw_c
+        x = _rand((1, h, w, c), seed=42, scale=0.1)
+        fp32 = cnn.apply_cnn("resnet50", params, x)
+        int8 = cnn.apply_cnn("resnet50", params, x,
+                             config=E.EngineConfig(precision="int8"))
+        snr = float(quant.snr_db(fp32, int8))
+        assert snr >= 30.0, f"ResNet-50 int8 SNR {snr:.1f} dB < 30"
+
+    def test_alexnet_full_forward_snr(self):
+        # 8 quantized layers compound: per-layer ~39-42 dB degrades by
+        # roughly 10*log10(8) ≈ 9 dB end-to-end, measuring ~29.5-30 dB.
+        # The golden asserts the honest compounding floor; the 30 dB
+        # acceptance bar is carried by the FC / conv-net / ResNet goldens.
+        params = cnn.init_cnn("alexnet", jax.random.PRNGKey(0))
+        h, w, c = cnn.CNNS["alexnet"].input_hw_c
+        x = _rand((1, h, w, c), seed=43, scale=0.1)
+        fp32 = cnn.apply_cnn("alexnet", params, x)
+        int8 = cnn.apply_cnn("alexnet", params, x,
+                             config=E.EngineConfig(precision="int8"))
+        snr = float(quant.snr_db(fp32, int8))
+        assert snr >= 28.0, f"AlexNet full int8 SNR {snr:.1f} dB < 28"
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: precision-keyed tiles (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+class TestTuneInt8:
+    def test_tile_key_has_precision_dimension(self):
+        op = E.OpSpec("dense", (8, 64), (64, 32), spec=E.dense_spec(2))
+        assert tune.tile_key(op, "pallas", None) \
+            != tune.tile_key(op, "pallas", None, "int8")
+        # pre-int8 3-positional call sites keep working (fp32 default)
+        assert tune.tile_key(op, "pallas", None) \
+            == tune.tile_key(op, "pallas", None, "fp32")
+
+    def test_int8_candidates_align_to_32_rows(self):
+        op = E.OpSpec("dense", (64, 512), (512, 256), spec=E.dense_spec(2))
+        cands = tune.candidates_for(op, precision="int8")
+        assert cands and all(bm % 32 == 0 for bm, _, _ in cands)
+        fp32 = tune.candidates_for(op)
+        assert any(bm % 32 != 0 for bm, _, _ in fp32)
+
+    def test_stale_fp32_only_v1_cache_degrades_cleanly(self, tune_dir):
+        # a v1 cache (pre-precision-axis key format) must be ignored
+        # wholesale, not half-matched: lookups fall back to kernel
+        # defaults instead of crashing or mispairing entries
+        op = _fc_program().ops[0]
+        key = tune.tile_key(op, "pallas", None)
+        tune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+        tune.cache_path().write_text(json.dumps({
+            "version": 1, "device_kind": "cpu",
+            "entries": {key: {"kind": "dense", "tile": [8, 128, 128]}}}))
+        tune.set_cache_dir(tune_dir)
+        cfg = E.EngineConfig(backend="pallas", interpret=True,
+                             tuning="cached")
+        assert tune.lookup(op, cfg) is None
+        assert tune.lookup(op, cfg, precision="int8") is None
+        # and the compiled net still runs on defaults
+        prog, w = _fc_program(), _fc_weights()
+        net = E.compile(prog, cfg.replace(precision="int8"))
+        assert all(t is None for t in net.tiles())
+        y = net.apply(w, _rand((4, 96), seed=60))
+        assert np.all(np.isfinite(np.asarray(y)))
+
+    def test_tune_program_writes_both_precisions(self, tune_dir):
+        prog = _fc_program()
+        base = dict(backend="pallas", interpret=True, tuning="autotune")
+        n_fp32 = tune.tune_program(prog.ops, E.EngineConfig(**base))
+        n_int8 = tune.tune_program(prog.ops, E.EngineConfig(
+            **base, precision="int8"))
+        assert n_fp32 == 2 and n_int8 == 2
+        cache = tune.load_cache()
+        assert len(cache["entries"]) == 4
+        precs = {e.get("precision") for e in cache["entries"].values()}
+        assert precs == {"fp32", "int8"}
+        cfg = E.EngineConfig(backend="pallas", interpret=True,
+                             tuning="cached")
+        t8 = tune.lookup(prog.ops[0], cfg, precision="int8")
+        assert t8 is not None and t8[0] % 32 == 0
+
+
+# ---------------------------------------------------------------------------
+# Plan bookkeeping: exec words halved, Table-4 aggregates pinned
+# ---------------------------------------------------------------------------
+
+
+class TestPlanBookkeeping:
+    def test_exec_ma_words_halved_for_int8(self):
+        op = E.OpSpec("dense", (8, 96), (96, 40), spec=E.dense_spec(2))
+        fp32 = E.plan_op(op, "xla")
+        int8 = E.with_precision(fp32, op, "int8")
+        assert fp32.exec_ma_words == fp32.ma_words
+        assert int8.exec_ma_words == -(-fp32.ma_words // 2)
+        # the analytic model itself never moves with precision
+        assert int8.ma_words == fp32.ma_words
+
+    @pytest.mark.parametrize("net", ["alexnet", "resnet50"])
+    def test_table4_aggregates_precision_invariant(self, net):
+        prog = cnn.program(net)
+        fp32 = E.plan_network(prog, E.EngineConfig())
+        int8 = E.plan_network(prog, E.EngineConfig(precision="int8"))
+        # paper Table-4 numbers are pinned to the fp32 analytic model
+        assert int8.conv_ma_words == fp32.conv_ma_words
+        assert int8.fc_ma_words == fp32.fc_ma_words
+        # ...while the execution-side words book the int8 halving
+        assert int8.exec_ma_words < fp32.exec_ma_words
+        assert fp32.exec_ma_words == fp32.conv_ma_words + fp32.fc_ma_words
