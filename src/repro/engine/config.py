@@ -32,6 +32,7 @@ from repro.engine.parallel import ParallelConfig
 _POLICIES = ("fixed", "auto")
 _TUNING_MODES = ("off", "cached", "autotune")
 _PRECISIONS = ("fp32", "int8")
+_FALLBACKS = ("none", "chain")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,17 @@ class EngineConfig:
                 ops. Per-op overrides: every engine op takes
                 `precision=`, which wins over the config (and over a
                 compiled plan's pinned precision) exactly like `backend=`.
+    fallback  — kernel-failure policy at dispatch. "none" (default) keeps
+                fail-stop semantics: a backend exception propagates.
+                "chain" degrades gracefully: when an op's planned backend
+                raises, dispatch retries the op down the degradation chain
+                (pallas -> xla -> ref), records the hop into every active
+                `Ledger` (`ledger.fallbacks`), and only raises once the
+                whole chain failed. Safe for results by construction: the
+                three built-in backends are pinned bitwise-identical on
+                every covered op (the parity suites), so a fallback changes
+                where an op ran, never what it returned. The serving
+                schedulers default to "chain".
     """
 
     backend: str = "xla"
@@ -101,6 +113,7 @@ class EngineConfig:
     tuning: str = "off"
     parallel: Optional[ParallelConfig] = None
     precision: str = "fp32"
+    fallback: str = "none"
 
     def __post_init__(self) -> None:
         if self.parallel is not None and not isinstance(self.parallel,
@@ -120,6 +133,10 @@ class EngineConfig:
             raise ValueError(
                 f"unknown precision {self.precision!r}; "
                 f"expected one of {_PRECISIONS}")
+        if self.fallback not in _FALLBACKS:
+            raise ValueError(
+                f"unknown fallback policy {self.fallback!r}; "
+                f"expected one of {_FALLBACKS}")
         if self.row_align is not None and (
                 not isinstance(self.row_align, int) or self.row_align < 1):
             raise ValueError(

@@ -95,6 +95,87 @@ def backend_names() -> Tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
+# Execution chokepoint: kernel-fault hook + graceful degradation chain
+# ---------------------------------------------------------------------------
+
+# Degradation order on kernel failure: Pallas kernels fall back to the
+# GFID XLA lowering, which falls back to XLA-native ops. Safe for results
+# by construction: the three built-in backends are pinned bitwise equal on
+# every covered op (kernel/int8/gather parity suites), so a hop down the
+# chain changes where an op ran, never what it returned. Custom backends
+# get no chain unless registered here.
+DEGRADATION: Dict[str, Tuple[str, ...]] = {
+    "pallas": ("xla", "ref"),
+    "xla": ("ref",),
+    "ref": (),
+}
+
+
+def fallback_chain(name: str) -> Tuple[str, ...]:
+    return DEGRADATION.get(name, ())
+
+
+def run_op(op, plan, call):
+    """Execute one planned op through the kernel-fault chokepoint.
+
+    `call(backend, plan)` performs the actual backend invocation; every
+    engine entrypoint (api.py) routes through here. Three behaviors:
+
+      * no injector installed and `EngineConfig.fallback == "none"` (the
+        default): a direct tail call — zero overhead, no exception
+        handling, byte-identical behavior to the pre-fault-layer engine;
+      * an installed `serve.faults` injector may fire the "kernel" point
+        for this (op kind, backend) visit, raising `KernelFault` exactly
+        where a real lowering/execution failure would surface;
+      * under ``fallback="chain"`` any backend exception (injected or
+        real) sends the op down `DEGRADATION`, re-planned onto the
+        fallback backend (tile config dropped — tuned tiles are
+        backend-specific); each hop is recorded into every active
+        `Ledger` (`ledger.fallbacks`) and onto the injector. Only when
+        the whole chain failed does the last error propagate.
+
+    Ops execute at trace time under jit, so both faults and fallbacks here
+    are per-trace events: a compiled program degrades (or not) at compile
+    time and then replays deterministically — a fallback can never flip
+    between steps of a serving loop.
+    """
+    from repro.engine.config import current_config
+    from repro.serve import faults as _faults
+
+    inj = _faults.active()
+    chained = current_config().fallback == "chain"
+    if inj is None and not chained:
+        return call(get_backend(plan.backend), plan)
+
+    chain = (plan.backend,) + (fallback_chain(plan.backend) if chained
+                               else ())
+    last_err: Optional[Exception] = None
+    for name in chain:
+        pl = plan if name == plan.backend else dataclasses.replace(
+            plan, backend=name, tile_config=None)
+        try:
+            if inj is not None and inj.fire("kernel",
+                                            site=f"{op.kind}:{name}"):
+                raise _faults.KernelFault(
+                    f"injected kernel fault: {op.kind} on backend {name!r}")
+            out = call(get_backend(name), pl)
+        except Exception as e:      # the chain IS the handler
+            if not chained:
+                raise
+            last_err = e
+            continue
+        if name != plan.backend:
+            from repro.engine import ledger as _ledger
+            _ledger.record_fallback(_ledger.FallbackRecord(
+                op.kind, plan.backend, name, str(last_err)))
+            if inj is not None:
+                inj.note_fallback(op.kind, plan.backend, name)
+        return out
+    assert last_err is not None
+    raise last_err
+
+
+# ---------------------------------------------------------------------------
 # int8 quantized lowerings shared by the non-Pallas backends
 # ---------------------------------------------------------------------------
 

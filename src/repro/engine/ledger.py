@@ -46,11 +46,27 @@ class OpRecord:
     plan: Optional[EnginePlan] = None
 
 
+@dataclasses.dataclass
+class FallbackRecord:
+    """One backend degradation: an op whose planned backend raised and
+    that re-ran further down the dispatch fallback chain
+    (`EngineConfig.fallback="chain"`). Recorded at the same moment an
+    `OpRecord` would be — call time eagerly, trace time under jit — so a
+    compiled program's degradations show up once per trace."""
+
+    kind: str                       # op kind ("dense", "conv2d", ...)
+    src: str                        # the backend that failed
+    dst: str                        # the backend that ran instead
+    error: str                      # str() of the exception that forced it
+
+
 class Ledger:
-    """An append-only list of `OpRecord`s with the paper's rollups."""
+    """An append-only list of `OpRecord`s with the paper's rollups, plus
+    the backend degradations (`FallbackRecord`) observed while active."""
 
     def __init__(self) -> None:
         self.records: List[OpRecord] = []
+        self.fallbacks: List[FallbackRecord] = []
 
     def __iter__(self) -> Iterator[OpRecord]:
         return iter(self.records)
@@ -63,6 +79,7 @@ class Ledger:
 
     def clear(self) -> None:
         self.records.clear()
+        self.fallbacks.clear()
 
     def record_plan(self, plan: EnginePlan) -> None:
         kind = "matmul" if plan.kind == "dense" else plan.kind
@@ -148,3 +165,11 @@ def record(plan: EnginePlan) -> None:
     none)."""
     for led in _TLS.stack:
         led.record_plan(plan)
+
+
+def record_fallback(rec: FallbackRecord) -> None:
+    """Record a backend degradation into every active ledger (no-op when
+    none) — dispatch's chokepoint calls this when the fallback chain
+    reroutes an op."""
+    for led in _TLS.stack:
+        led.fallbacks.append(rec)

@@ -133,14 +133,33 @@ def load_cache(kind: Optional[str] = None) -> dict:
 
 
 def save_cache(kind: Optional[str] = None) -> Path:
-    """Write the in-memory cache for `kind` to disk (atomic replace)."""
+    """Write the in-memory cache for `kind` to disk, crash-safely.
+
+    The payload lands in a uniquely-named temp file in the cache
+    directory (same filesystem, so the final `os.replace` is atomic),
+    fsync'd before the rename — a crash mid-write leaves either the old
+    cache or the new one, never a truncated JSON, and two concurrent
+    savers never interleave into one file. The temp file is unlinked on
+    any failure."""
+    import tempfile
     kind = kind or device_kind()
     cache = load_cache(kind)
     path = cache_path(kind)
     path.parent.mkdir(parents=True, exist_ok=True)
-    tmp = path.with_suffix(".json.tmp")
-    tmp.write_text(json.dumps(cache, indent=2, sort_keys=True) + "\n")
-    tmp.replace(path)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(json.dumps(cache, indent=2, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return path
 
 

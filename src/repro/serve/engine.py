@@ -204,7 +204,8 @@ def decode_program(cfg: ModelConfig, batch: int,
                            batch_size=batch, batch_axes=axes)
 
 
-def paged_decode_program(cfg: ModelConfig, layout, batch: int) -> "E.Program":
+def paged_decode_program(cfg: ModelConfig, layout, batch: int,
+                         guard: bool = False) -> "E.Program":
     """One continuous-batching decode step over a paged KV pool, as an
     `engine.Program` — the block-pool replacement for the dense
     `decode_program`/`decode_state_shapes` serving path.
@@ -221,30 +222,54 @@ def paged_decode_program(cfg: ModelConfig, layout, batch: int) -> "E.Program":
     `layout` is a `serve.kv_pool.PagedLayout`. Compile with
     `engine.compile(prog, cfg, donate_argnums=(1,))` so the pool arrays
     are donated through every step instead of copied.
+
+    `guard=True` builds the numerics-guard variant the fault-injecting
+    `ContinuousScheduler` compiles instead — an extra trailing argument
+    `poison (B,) f32` (0.0 clean, NaN to poison a row's logits) and an
+    extra output `ok (B,) bool` (all-finite verdict per row's last-token
+    logits). The poison lands on the *logits only*, selected via
+    `jnp.where` after `T.decode_step` ran — so non-poisoned rows keep the
+    clean program's exact argmax inputs bitwise (where-select copies
+    them, including signed zeros), and the state written back to the pool
+    is always the finite state the clean math produced (the pool's
+    NEG_INF-masking parity contract requires finite block contents —
+    injecting into the cache would break *other* requests). The guard is
+    runtime data, never trace-time branching: with no injector the
+    scheduler compiles the unguarded program, byte-identical to PR 8's.
     """
     params_sh = T.param_shapes(cfg)
     npb = layout.blocks_per_req
 
-    def fn(params, arrays, tables, slots, tokens, pos):
+    def fn(params, arrays, tables, slots, tokens, pos, poison=None):
         state = layout.gather(arrays, tables, slots)
         logits, new_state = T.decode_step(cfg, params, state, tokens, pos)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return tok, layout.scatter_step(arrays, new_state, tables, slots,
-                                        pos)
+        last = logits[:, -1]
+        out = layout.scatter_step(arrays, new_state, tables, slots, pos)
+        if poison is None:
+            tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return tok, out
+        last = jnp.where(jnp.isnan(poison)[:, None],
+                         jnp.float32(float("nan")), last)
+        ok = jnp.all(jnp.isfinite(last), axis=-1)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return tok, ok, out
 
     avals = (params_sh, layout.array_avals(),
              jax.ShapeDtypeStruct((batch, npb), jnp.int32),
              jax.ShapeDtypeStruct((batch,), jnp.int32),
              jax.ShapeDtypeStruct((batch, 1), jnp.int32),
              jax.ShapeDtypeStruct((batch,), jnp.int32))
+    if guard:
+        avals = avals + (jax.ShapeDtypeStruct((batch,), jnp.float32),)
+    suffix = "-guard" if guard else ""
     return E.trace_program(
         fn, *avals,
         name=f"{cfg.name}-paged-decode{layout.max_len}"
-             f"x{layout.block_size}b{batch}")
+             f"x{layout.block_size}b{batch}{suffix}")
 
 
-def prefill_ingest_program(cfg: ModelConfig, layout,
-                           seq: int) -> "E.Program":
+def prefill_ingest_program(cfg: ModelConfig, layout, seq: int,
+                           guard: bool = False) -> "E.Program":
     """Prefill one request at its exact prompt length and ingest the
     resulting dense state into the paged pool (the continuous scheduler's
     admission path; compiled per distinct prompt length so the GEMM M
@@ -253,23 +278,39 @@ def prefill_ingest_program(cfg: ModelConfig, layout,
 
     Signature: (params, pool_arrays, table_row (blocks_per_req,) i32,
     slot () i32, tokens (1, seq) i32) -> (first_token (1,) i32, arrays').
+
+    `guard=True` is the numerics-guard variant (see
+    `paged_decode_program`): a trailing `poison () f32` argument and an
+    `ok () bool` output — NaN poison hits the prefill logits only, never
+    the ingested cache state, so a quarantined admission leaves the pool
+    contents finite.
     """
     params_sh = T.param_shapes(cfg)
     n_blocks = -(-seq // layout.block_size)
 
-    def fn(params, arrays, table_row, slot, tokens):
+    def fn(params, arrays, table_row, slot, tokens, poison=None):
         logits, state = T.prefill(cfg, params, {"tokens": tokens},
                                   layout.max_len)
+        out = layout.scatter_prefill(arrays, state, table_row, slot,
+                                     n_blocks)
+        if poison is None:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return tok, out
+        logits = jnp.where(jnp.isnan(poison), jnp.float32(float("nan")),
+                           logits)
+        ok = jnp.all(jnp.isfinite(logits))
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return tok, layout.scatter_prefill(arrays, state, table_row, slot,
-                                           n_blocks)
+        return tok, ok, out
 
     avals = (params_sh, layout.array_avals(),
              jax.ShapeDtypeStruct((layout.blocks_per_req,), jnp.int32),
              jax.ShapeDtypeStruct((), jnp.int32),
              jax.ShapeDtypeStruct((1, seq), jnp.int32))
+    if guard:
+        avals = avals + (jax.ShapeDtypeStruct((), jnp.float32),)
+    suffix = "-guard" if guard else ""
     return E.trace_program(
-        fn, *avals, name=f"{cfg.name}-prefill-ingest{seq}")
+        fn, *avals, name=f"{cfg.name}-prefill-ingest{seq}{suffix}")
 
 
 def greedy_generate(cfg: ModelConfig, params, batch_in: Dict, steps: int,

@@ -114,10 +114,13 @@ class BlockAllocator:
         if table[idx]:
             return table[idx]
         if not self._free:
+            usable = self.num_blocks - 1
             raise PoolExhausted(
-                f"no free blocks for request {rid} (need table slot {idx}; "
-                f"{self.live_blocks} live across {len(self.tables)} "
-                "requests) — evict or wait")
+                f"no free blocks for request {rid} (need table slot {idx}): "
+                f"{self.live_blocks}/{usable} blocks live "
+                f"({self.live_blocks / usable:.0%} occupancy) across "
+                f"{len(self.tables)} requests, free-block low-water "
+                f"{self.low_water} — evict or wait")
         block = self._free.pop()
         table[idx] = block
         self.low_water = min(self.low_water, len(self._free))
@@ -328,24 +331,74 @@ class KVBlockPool:
         # slot 0 reserved for pad rows, like block 0
         self._free_slots: List[int] = list(range(max_slots - 1, 0, -1))
         self._slot_of: Dict[int, int] = {}
+        # namespace for fault-injection sites (ReplicaSpread sets "r<i>:"
+        # so per-request fault schedules stay distinct across replicas)
+        self.fault_site = ""
 
     # -- request lifecycle ---------------------------------------------------
 
     def register(self, rid: int) -> None:
         if not self._free_slots:
-            raise PoolExhausted(f"no free state slots for request {rid} "
-                                f"(max_slots={self.layout.max_slots})")
+            s = self.snapshot()
+            raise PoolExhausted(
+                f"no free state slots for request {rid} "
+                f"(max_slots={self.layout.max_slots}, "
+                f"{s['live_requests']} live requests, block occupancy "
+                f"{s['occupancy']:.0%}, free-block low-water "
+                f"{s['free_low_water']})")
         self.allocator.register(rid)
         self._slot_of[rid] = self._free_slots.pop()
 
     def ensure(self, rid: int, pos: int) -> List[int]:
-        """Blocks covering positions [0, pos] — allocate the missing ones."""
+        """Blocks covering positions [0, pos] — allocate the missing ones.
+
+        An installed `serve.faults` injector may fire the "pool" point
+        here (an injected exhaustion storm): the raise is indistinguishable
+        from a genuine empty free-list — no side effects, already-held
+        blocks stay valid — so the schedulers' preempt/retry paths are
+        exercised exactly as real pressure would.
+        """
+        from repro.serve import faults as _faults
+        inj = _faults.active()
+        if inj is not None and inj.fire("pool",
+                                        site=f"{self.fault_site}{rid}"):
+            s = self.snapshot()
+            raise PoolExhausted(
+                f"injected pool-exhaustion storm for request {rid} "
+                f"({s['live_blocks']}/{s['num_blocks'] - 1} blocks live, "
+                f"{s['live_requests']} live requests)")
         return self.allocator.ensure(rid, pos, self.layout.block_size)
 
     def release(self, rid: int) -> List[int]:
         blocks = self.allocator.release(rid)
         self._free_slots.append(self._slot_of.pop(rid))
         return blocks
+
+    def scrub_release(self, rid: int) -> List[int]:
+        """Zero `rid`'s blocks and state slot, then release them.
+
+        The quarantine path: the parity contract requires pool contents to
+        stay finite (NEG_INF masking only yields exactly-0.0 softmax
+        weight for finite garbage — see the module docstring), so a
+        request failed for non-finite *model state* must not recycle its
+        blocks with NaN/Inf still in them. The guarded programs only ever
+        poison logits, never the cache, so this scrub is belt-and-braces —
+        it also covers organically non-finite state (a model bug), which
+        the numerics guard detects the same way.
+        """
+        table = self.allocator.tables[rid]
+        blocks = jnp.asarray([b for b in table if b], jnp.int32)
+        slot = self._slot_of[rid]
+
+        def leaf(arr, sp):
+            if sp.paged:
+                if blocks.size == 0:
+                    return arr
+                return arr.at[blocks].set(jnp.zeros((), arr.dtype))
+            return arr.at[slot].set(jnp.zeros((), arr.dtype))
+        self.arrays = jax.tree_util.tree_map(leaf, self.arrays,
+                                             self.layout.specs)
+        return self.release(rid)
 
     # -- batch views ---------------------------------------------------------
 

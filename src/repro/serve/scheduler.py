@@ -44,6 +44,7 @@ the caller's accuracy call.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -53,6 +54,9 @@ import jax.numpy as jnp
 
 from repro import engine as E
 from repro.engine import ledger as _ledger
+from repro.serve import faults as _faults
+from repro.serve.faults import (  # noqa: F401 (re-exported surface)
+    FatalError, FaultInjector, TransientError, backoff_s)
 
 
 class AdmissionError(RuntimeError):
@@ -127,8 +131,12 @@ class Scheduler:
     """Shared-queue batched scheduler over registered engine programs.
 
     config           — `EngineConfig` every bucket compiles under; defaults
-                       to `EngineConfig(row_align=8)` so batched results are
-                       bitwise identical to batch-1 results. The config's
+                       to `EngineConfig(row_align=8, fallback="chain")` so
+                       batched results are bitwise identical to batch-1
+                       results and a kernel-level failure degrades
+                       pallas -> xla -> ref instead of killing the batch
+                       (safe: the backends are pinned bitwise-equal, see
+                       engine/config.py). The config's
                        `tuning` mode flows into every (program, bucket)
                        `CompiledNet`: under `"cached"`/`"autotune"` each
                        bucket executes on the tuned kernel tiles — and
@@ -158,20 +166,26 @@ class Scheduler:
                        — replica placement never changes a result, and
                        model-axis sharding is exact under the default
                        `exact_only` policy (tests/test_parallel.py).
+    faults           — an optional `serve.faults.FaultInjector` installed
+                       for the dynamic extent of every dispatch (so the
+                       kernel/pool hook sites see it) and consulted for
+                       latency spikes at each step. None (default) leaves
+                       every hook a no-op.
     """
 
     def __init__(self, config: Optional[E.EngineConfig] = None,
                  policy: str = "fifo", max_batch: int = 8,
                  buckets: Optional[Sequence[int]] = None,
                  max_queue_cost_s: Optional[float] = None,
-                 mesh: Optional[Any] = None):
+                 mesh: Optional[Any] = None,
+                 faults: Optional[_faults.FaultInjector] = None):
         if policy not in _POLICIES:
             raise ValueError(f"unknown policy {policy!r}; expected one of "
                              f"{_POLICIES}")
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.config = config if config is not None \
-            else E.EngineConfig(row_align=8)
+            else E.EngineConfig(row_align=8, fallback="chain")
         self.mesh = mesh
         if mesh is not None:
             from repro.engine import parallel as parlib
@@ -199,11 +213,25 @@ class Scheduler:
             raise ValueError(f"buckets {self.buckets} must end at "
                              f"max_batch={max_batch}")
         self.max_queue_cost_s = max_queue_cost_s
+        self.faults = faults
         self.ledger = E.Ledger()        # unit plans of everything served
+        # trace-time records of the *executed* dispatches: backend
+        # degradations land here (ledger.fallbacks), once per traced bucket
+        self.fault_ledger = E.Ledger()
+        self._spikes = 0                # injected latency spikes absorbed
         self._entries: Dict[str, _Entry] = {}
         self._queue: List[Ticket] = []
         self._next_rid = 0
         self._wall_s = 0.0              # summed dispatch wall time
+
+    def _inj_ctx(self):
+        """Ambient-injector context for a dispatch: installs this
+        scheduler's injector so the dispatch/kv_pool hook sites observe it
+        (no-op — and no overhead beyond a null contextmanager — when the
+        scheduler runs clean)."""
+        if self.faults is None:
+            return contextlib.nullcontext()
+        return _faults.injecting(self.faults)
 
     # -- registration -------------------------------------------------------
 
@@ -339,7 +367,8 @@ class Scheduler:
         packed = iter(self._pack_fn(entry)(per))
         args = [entry.shared[pos] if pos in entry.shared else next(packed)
                 for pos in range(len(entry.program.in_avals))]
-        out = self.compiled(entry.name, bucket, replica).apply(*args)
+        with self._inj_ctx(), _ledger.tracking(self.fault_ledger):
+            out = self.compiled(entry.name, bucket, replica).apply(*args)
         results = self._unpack_fn(entry, bucket)(out)
         if len(self._groups) == 1:
             jax.block_until_ready(results)
@@ -405,10 +434,16 @@ class Scheduler:
         unit = entry.unit_plan.total_latency_s
         if self.max_queue_cost_s is not None \
                 and self.queue_cost_s() + unit > self.max_queue_cost_s:
+            served = sum(e.served for e in self._entries.values())
             raise AdmissionError(
                 f"queue plan-cost {self.queue_cost_s():.6f}s + request "
                 f"{unit:.6f}s exceeds max_queue_cost_s="
-                f"{self.max_queue_cost_s:.6f}s ({len(self._queue)} pending)")
+                f"{self.max_queue_cost_s:.6f}s ({len(self._queue)} pending "
+                f"across {len({t.model for t in self._queue})} program(s), "
+                f"{served} served in "
+                f"{sum(e.batches for e in self._entries.values())} batches, "
+                f"budget {self.queue_cost_s() / self.max_queue_cost_s:.0%} "
+                "used)")
         now = time.perf_counter()
         ticket = Ticket(rid=self._next_rid, model=name, args=tuple(args),
                         submit_s=now, unit_latency_s=unit,
@@ -458,6 +493,11 @@ class Scheduler:
         self._expire()
         if not self._queue:
             return []
+        if self.faults is not None:
+            spike = self.faults.latency("step")
+            if spike:
+                self._spikes += 1
+                time.sleep(spike)
         name = self._pick_model()
         entry = self._entries[name]
         batch = [t for t in self._queue if t.model == name][:self.max_batch]
@@ -533,6 +573,12 @@ class Scheduler:
             "pending": len(self._queue),
             "plan_macs_served": self.ledger.total_macs,
             "plan_cycles_served": self.ledger.total_cycles,
+            # backend degradations observed at dispatch-trace time
+            "fallbacks": [(f.kind, f.src, f.dst)
+                          for f in self.fault_ledger.fallbacks],
+            "latency_spikes": self._spikes,
+            "faults": (self.faults.summary()
+                       if self.faults is not None else None),
             "models": per_model,
         }
 
@@ -554,7 +600,9 @@ def latency_percentiles(tickets: Sequence[Any],
 # Continuous batching over the paged KV block pool
 # ---------------------------------------------------------------------------
 
-_GEN_STATUSES = ("queued", "running", "done", "cancelled", "expired")
+_GEN_STATUSES = ("queued", "running", "done", "cancelled", "expired",
+                 "failed")
+_TERMINAL = ("done", "cancelled", "expired", "failed")
 
 
 @dataclasses.dataclass(eq=False)
@@ -565,7 +613,17 @@ class GenTicket:
     the request's cache currently encodes (grows past `prompt` only when a
     preemption forces generated tokens back through prefill). `tokens` is
     every token generated so far; `status` walks
-    queued -> running -> done | cancelled | expired.
+    queued -> running -> done | cancelled | expired | failed.
+
+    "failed" is terminal: the numerics guard quarantined the request
+    (non-finite logits) or its transient-error retry budget ran out;
+    `error` says why. `retries` counts backoff-and-requeue cycles
+    (admission-time pool storms / transient kernel errors), `migrations`
+    counts replica failovers (`ReplicaSpread` drained a lost replica and
+    re-prefilled this request on a survivor) — both surfaced like
+    `preemptions`, and migration shares preemption's parity carve-out: a
+    re-prefilled context is not bitwise-guaranteed against the
+    uninterrupted stream.
     """
 
     rid: int
@@ -578,6 +636,10 @@ class GenTicket:
     status: str = "queued"
     pos: int = 0                    # next cache position to be written
     preemptions: int = 0
+    retries: int = 0                # transient-failure requeue count
+    migrations: int = 0             # replica-failover count
+    error: Optional[str] = None     # why status == "failed"
+    not_before_s: float = 0.0       # backoff: earliest re-admission time
     replica: int = 0                # mesh data group serving this request
     done_s: float = 0.0
 
@@ -587,7 +649,7 @@ class GenTicket:
 
     @property
     def latency_s(self) -> float:
-        if self.status not in ("done", "cancelled", "expired"):
+        if self.status not in _TERMINAL:
             return float("nan")
         return self.done_s - self.submit_s
 
@@ -638,7 +700,10 @@ class ContinuousScheduler:
                  admission: str = "continuous",
                  max_live_cost_s: Optional[float] = None,
                  max_slots: int = 64, state_dtype=jnp.bfloat16,
-                 mesh: Optional[Any] = None):
+                 mesh: Optional[Any] = None,
+                 faults: Optional[_faults.FaultInjector] = None,
+                 guard: Optional[bool] = None, max_retries: int = 3,
+                 fault_site: str = ""):
         if admission not in ("continuous", "drain"):
             raise ValueError(f"unknown admission {admission!r}; expected "
                              "'continuous' or 'drain'")
@@ -651,7 +716,7 @@ class ContinuousScheduler:
         self.cfg = cfg
         self.params = params
         self.config = config if config is not None \
-            else E.EngineConfig(row_align=8)
+            else E.EngineConfig(row_align=8, fallback="chain")
         # a model-parallel mesh for every decode/prefill compile: this
         # scheduler owns ONE replica (one paged pool) — spreading across
         # data groups is ReplicaSpread's job, so the mesh here is expected
@@ -680,9 +745,23 @@ class ContinuousScheduler:
         if self.buckets[-1] != max_batch:
             raise ValueError(f"buckets {self.buckets} must end at "
                              f"max_batch={max_batch}")
+        # fault-tolerance knobs: `faults` is this scheduler's injector
+        # (installed for the dynamic extent of its dispatches so the
+        # dispatch/kv_pool hooks observe it); `guard` compiles the
+        # numerics-guard program variants (default: only when injecting —
+        # the clean path keeps the unguarded programs, so fault hooks add
+        # zero dispatches); `max_retries` bounds transient-failure
+        # requeues per ticket; `fault_site` namespaces this scheduler's
+        # fault-point sites (ReplicaSpread sets "r<i>:" per replica).
+        self.faults = faults
+        self.guard = (faults is not None) if guard is None else bool(guard)
+        self.max_retries = int(max_retries)
+        self.fault_site = fault_site
+        self.fault_ledger = E.Ledger()  # trace-time dispatch records
         self.pool = KVBlockPool(cfg, max_len=max_len, block_size=block_size,
                                 num_blocks=num_blocks, max_slots=max_slots,
                                 state_dtype=state_dtype)
+        self.pool.fault_site = fault_site
         self.layout = self.pool.layout
         # analytic unit cost of one live request: a batch-1 paged decode
         # step (attention/FFN GEMMs + the paged-gather reconstruction)
@@ -703,17 +782,55 @@ class ContinuousScheduler:
         self._evicted = 0
         self._expired = 0
         self._cancelled = 0
+        self._failed = 0                # quarantined / retry-exhausted
+        self._retries = 0               # transient requeue events
+        self._spikes = 0                # injected latency spikes absorbed
+        self._decode_faults = 0         # transient decode-dispatch errors
+        self._consec_decode_faults = 0
         self._admit_history: List[int] = []
         self._evict_history: List[int] = []
         self._wall_s = 0.0
+        # exactly-once termination invariant: rid -> terminal status. Every
+        # terminal transition routes through _mark_terminal, which raises
+        # FatalError on a double-termination — the chaos harness's core
+        # property, enforced in-band.
+        self._terminated: Dict[int, str] = {}
+
+    def _inj_ctx(self):
+        if self.faults is None:
+            return contextlib.nullcontext()
+        return _faults.injecting(self.faults)
+
+    def _mark_terminal(self, t: GenTicket, status: str,
+                       error: Optional[str] = None) -> None:
+        """The single gate to a terminal status: records completion time,
+        bumps the matching counter, and enforces that no ticket ever
+        terminates twice."""
+        if t.rid in self._terminated:
+            raise FatalError(
+                f"request {t.rid} terminated twice: already "
+                f"{self._terminated[t.rid]!r}, now {status!r}")
+        if t.status in _TERMINAL:
+            raise FatalError(
+                f"request {t.rid} re-terminated: {t.status!r} -> {status!r}")
+        self._terminated[t.rid] = status
+        t.status = status
+        t.error = error
+        t.done_s = time.perf_counter()
+        self._failed += status == "failed"
+        self._expired += status == "expired"
+        self._cancelled += status == "cancelled"
 
     # -- compiled-program caches --------------------------------------------
 
     def decode_compiled(self, bucket: int) -> E.CompiledNet:
-        """The paged decode step at `bucket` rows (pool arrays donated)."""
+        """The paged decode step at `bucket` rows (pool arrays donated).
+        Under `guard` this is the numerics-guard program variant (poison
+        mask in, per-row finite verdict out); the clean path compiles the
+        unguarded program, identical to a fault-free scheduler's."""
         if bucket not in self._decode:
             prog = self._serve_engine.paged_decode_program(
-                self.cfg, self.layout, bucket)
+                self.cfg, self.layout, bucket, guard=self.guard)
             self._decode[bucket] = E.compile(prog, self.config,
                                              donate_argnums=(1,),
                                              mesh=self.mesh)
@@ -724,7 +841,7 @@ class ContinuousScheduler:
         arrays donated) — one jit entry per distinct length."""
         if seq not in self._prefill:
             prog = self._serve_engine.prefill_ingest_program(
-                self.cfg, self.layout, seq)
+                self.cfg, self.layout, seq, guard=self.guard)
             self._prefill[seq] = E.compile(prog, self.config,
                                            donate_argnums=(1,),
                                            mesh=self.mesh)
@@ -732,12 +849,11 @@ class ContinuousScheduler:
 
     # -- request lifecycle --------------------------------------------------
 
-    def submit(self, prompt: Sequence[int], steps: int,
-               timeout_s: Optional[float] = None) -> GenTicket:
-        """Queue one greedy-generation request: `steps` tokens after
-        `prompt`. `timeout_s` is a wall-clock deadline relative to now;
-        past it the request is dropped (queued or mid-generation) and its
-        blocks return to the pool."""
+    def validate_request(self, prompt: Sequence[int],
+                         steps: int) -> Tuple[int, ...]:
+        """Shape/capacity checks for one request; returns the normalized
+        prompt. Factored out of `submit` so `ReplicaSpread` can validate
+        a request even when no healthy replica can accept it yet."""
         prompt = tuple(int(t) for t in prompt)
         if not prompt:
             raise ValueError("empty prompt")
@@ -754,6 +870,15 @@ class ContinuousScheduler:
             raise ValueError(
                 f"request needs {need} blocks but the pool only has "
                 f"{self.pool.allocator.num_blocks - 1} usable ones")
+        return prompt
+
+    def submit(self, prompt: Sequence[int], steps: int,
+               timeout_s: Optional[float] = None) -> GenTicket:
+        """Queue one greedy-generation request: `steps` tokens after
+        `prompt`. `timeout_s` is a wall-clock deadline relative to now;
+        past it the request is dropped (queued or mid-generation) and its
+        blocks return to the pool."""
+        prompt = self.validate_request(prompt, steps)
         now = time.perf_counter()
         t = GenTicket(rid=self._next_rid, prompt=prompt, steps=steps,
                       submit_s=now, context=prompt,
@@ -767,17 +892,13 @@ class ContinuousScheduler:
         """Cancel a queued or running request. A running request's KV
         blocks return to the pool immediately (before the next step)."""
         if ticket.status == "queued":
-            ticket.status = "cancelled"
-            ticket.done_s = time.perf_counter()
+            self._mark_terminal(ticket, "cancelled")
             self._waiting = [t for t in self._waiting if t is not ticket]
-            self._cancelled += 1
             return True
         if ticket.status == "running":
             self.pool.release(ticket.rid)
-            ticket.status = "cancelled"
-            ticket.done_s = time.perf_counter()
+            self._mark_terminal(ticket, "cancelled")
             self._running = [t for t in self._running if t is not ticket]
-            self._cancelled += 1
             return True
         return False
 
@@ -797,14 +918,10 @@ class ContinuousScheduler:
 
         for t in [t for t in self._running if past(t)]:
             self.pool.release(t.rid)
-            t.status = "expired"
-            t.done_s = now
-            self._expired += 1
+            self._mark_terminal(t, "expired")
         self._running = [t for t in self._running if t.status == "running"]
         for t in [t for t in self._waiting if past(t)]:
-            t.status = "expired"
-            t.done_s = now
-            self._expired += 1
+            self._mark_terminal(t, "expired")
         self._waiting = [t for t in self._waiting if t.status == "queued"]
 
     def _can_admit(self, t: GenTicket) -> bool:
@@ -821,22 +938,78 @@ class ContinuousScheduler:
             return False
         return True
 
-    def _admit(self, t: GenTicket) -> None:
-        """Prefill-ingest `t` into the pool and join the running set."""
+    def _admit(self, t: GenTicket) -> bool:
+        """Prefill-ingest `t` into the pool and join the running set.
+
+        Atomic under failure: an injected pool storm or a transient
+        kernel error mid-admission returns every claimed resource and
+        re-raises for the caller's retry/backoff path. Returns False when
+        the numerics guard quarantined the admission (the ticket is then
+        terminal "failed"), True on success.
+        """
         seq = len(t.context)
         self.pool.register(t.rid)
-        self.pool.ensure(t.rid, seq)    # prompt blocks + next decode write
-        pre = self.prefill_compiled(seq)
-        table_row = jnp.asarray(self.pool.allocator.tables[t.rid], jnp.int32)
-        slot = jnp.int32(self.pool._slot_of[t.rid])
-        toks = jnp.asarray([t.context], jnp.int32)
-        tok, self.pool.arrays = pre.apply(self.params, self.pool.arrays,
-                                          table_row, slot, toks)
+        try:
+            with self._inj_ctx():          # pool-storm hook sees injector
+                self.pool.ensure(t.rid, seq)  # prompt + next decode write
+            pre = self.prefill_compiled(seq)
+            table_row = jnp.asarray(self.pool.allocator.tables[t.rid],
+                                    jnp.int32)
+            slot = jnp.int32(self.pool._slot_of[t.rid])
+            toks = jnp.asarray([t.context], jnp.int32)
+            with self._inj_ctx(), _ledger.tracking(self.fault_ledger):
+                if self.guard:
+                    fire = (self.faults is not None and self.faults.fire(
+                        "numerics", site=f"{self.fault_site}pre:{t.rid}"))
+                    poison = jnp.float32(float("nan") if fire else 0.0)
+                    tok, ok, self.pool.arrays = pre.apply(
+                        self.params, self.pool.arrays, table_row, slot,
+                        toks, poison)
+                else:
+                    ok = None
+                    tok, self.pool.arrays = pre.apply(
+                        self.params, self.pool.arrays, table_row, slot,
+                        toks)
+        except (self._PoolExhausted, TransientError):
+            self.pool.release(t.rid)
+            raise
+        if ok is not None and not bool(ok):
+            self._quarantine(t, "non-finite prefill logits")
+            return False
         t.tokens.append(int(tok[0]))
         t.pos = seq
         t.status = "running"
         self._running.append(t)
         self._admitted += 1
+        return True
+
+    def _quarantine(self, t: GenTicket, reason: str) -> None:
+        """Numerics-guard quarantine: scrub-and-release the request's pool
+        state (poison must never recycle into other requests' blocks — the
+        parity contract needs finite pool contents) and fail the ticket.
+        Batchmates are untouched: the guarded program poisons logits
+        row-selectively via `jnp.where`, so their tokens stay bitwise
+        identical to the clean run."""
+        self.pool.scrub_release(t.rid)
+        self._mark_terminal(t, "failed", error=reason)
+
+    def _retry(self, t: GenTicket, err: str) -> None:
+        """Transient admission failure: requeue with capped exponential
+        backoff (deterministic jitter keyed by rid), or fail once the
+        retry budget is spent."""
+        t.retries += 1
+        if t.retries > self.max_retries:
+            self._mark_terminal(
+                t, "failed",
+                error=f"retry budget exhausted ({self.max_retries}): {err}")
+            return
+        self._retries += 1
+        t.not_before_s = time.perf_counter() + backoff_s(
+            t.retries, base=0.002, cap=0.1,
+            seed=self.faults.seed if self.faults is not None else 0,
+            token=f"{self.fault_site}{t.rid}")
+        t.status = "queued"
+        self._waiting.insert(0, t)
 
     def _preempt(self, t: GenTicket) -> None:
         """Evict a running request: free its blocks and requeue it at the
@@ -854,8 +1027,7 @@ class ContinuousScheduler:
 
     def _finish(self, t: GenTicket) -> None:
         self.pool.release(t.rid)
-        t.status = "done"
-        t.done_s = time.perf_counter()
+        self._mark_terminal(t, "done")
 
     def _bucket_for(self, k: int) -> int:
         for b in self.buckets:
@@ -871,17 +1043,40 @@ class ContinuousScheduler:
         drain: only once the running set empties), ensure every running
         row's next block (preempting youngest-first on exhaustion), run
         one batched paged decode step, retire finished requests. Returns
-        the tickets that finished this step."""
+        the tickets that reached a terminal status this step (done, or
+        failed by the numerics guard / retry budget)."""
         t0 = time.perf_counter()
+        if self.faults is not None:
+            spike = self.faults.latency(f"{self.fault_site}step")
+            if spike:
+                self._spikes += 1
+                time.sleep(spike)
         self._expire_deadlines()
 
         admitted_now = 0
         finished: List[GenTicket] = []
         if self.admission == "continuous" or not self._running:
-            while (self._waiting and len(self._running) < self.max_batch
-                   and self._can_admit(self._waiting[0])):
-                t = self._waiting.pop(0)
-                self._admit(t)
+            now = time.perf_counter()
+            for t in list(self._waiting):
+                if len(self._running) >= self.max_batch:
+                    break
+                if t.not_before_s > now:
+                    continue        # backing off: invisible to head-of-line
+                if not self._can_admit(t):
+                    break           # head-of-line blocking preserved
+                self._waiting.remove(t)
+                try:
+                    ok = self._admit(t)
+                except (self._PoolExhausted, TransientError) as e:
+                    # atomic failure: _admit returned every resource;
+                    # requeue with backoff (or fail if the budget is spent)
+                    self._retry(t, str(e))
+                    if t.status == "failed":
+                        finished.append(t)
+                    continue
+                if not ok:          # guard quarantined the admission
+                    finished.append(t)
+                    continue
                 admitted_now += 1
                 if len(t.tokens) >= t.steps:
                     # finished at prefill: never occupies a decode row
@@ -902,15 +1097,19 @@ class ContinuousScheduler:
         while i < len(self._running):
             t = self._running[i]
             try:
-                self.pool.ensure(t.rid, t.pos)
+                with self._inj_ctx():      # pool-storm hook sees injector
+                    self.pool.ensure(t.rid, t.pos)
                 i += 1
             except self._PoolExhausted:
                 victim = self._running[-1]
-                if victim is t and len(self._running) == 1:
+                if victim is t and len(self._running) == 1 \
+                        and self.faults is None:
                     raise RuntimeError(
                         "single running request exhausted the pool — "
                         "impossible when submit()'s whole-request fit "
                         "check passed")  # pragma: no cover
+                # with an injector a lone running request CAN see a storm;
+                # preemption (not failure) keeps it alive through backoff
                 self._preempt(victim)
                 evicted_now += 1
                 if victim is t:
@@ -929,17 +1128,54 @@ class ContinuousScheduler:
             pos = jnp.asarray([t.pos for t in self._running]
                               + [0] * (bucket - k), jnp.int32)
             dec = self.decode_compiled(bucket)
-            tok, self.pool.arrays = dec.apply(self.params, self.pool.arrays,
-                                              tables, slots, toks, pos)
+            try:
+                with self._inj_ctx(), _ledger.tracking(self.fault_ledger):
+                    if self.guard:
+                        mask = [float("nan") if (
+                            self.faults is not None and self.faults.fire(
+                                "numerics",
+                                site=f"{self.fault_site}{t.rid}"))
+                            else 0.0 for t in self._running]
+                        poison = jnp.asarray(mask + [0.0] * (bucket - k),
+                                             jnp.float32)
+                        tok, okv, self.pool.arrays = dec.apply(
+                            self.params, self.pool.arrays, tables, slots,
+                            toks, pos, poison)
+                    else:
+                        okv = None
+                        tok, self.pool.arrays = dec.apply(
+                            self.params, self.pool.arrays, tables, slots,
+                            toks, pos)
+            except TransientError as e:
+                # trace-time kernel fault with no fallback left: the step
+                # produced nothing (a trace error never consumes the
+                # donated pool arrays), so the same rows retry next step.
+                self._decode_faults += 1
+                self._consec_decode_faults += 1
+                if self._consec_decode_faults >= 8:
+                    raise FatalError(
+                        f"{self._consec_decode_faults} consecutive decode "
+                        f"steps failed; last: {e}") from e
+                self._wall_s += time.perf_counter() - t0
+                return finished
+            self._consec_decode_faults = 0
             tok = jax.device_get(tok)
+            okl = None if okv is None else jax.device_get(okv)
             self._steps += 1
-            self._tokens_out += k
             self._fill_sum += k / bucket
             for i, t in enumerate(self._running):
+                if okl is not None and not bool(okl[i]):
+                    # the guard poisoned only this row's logits (jnp.where
+                    # row-select), so batchmates' tokens are untouched
+                    self._quarantine(t, "non-finite decode logits")
+                    finished.append(t)
+                    continue
                 t.tokens.append(int(tok[i]))
                 t.pos += 1
+                self._tokens_out += 1
             for t in [t for t in self._running
-                      if len(t.tokens) >= t.steps]:
+                      if t.status == "running"
+                      and len(t.tokens) >= t.steps]:
                 self._finish(t)
                 finished.append(t)
             self._running = [t for t in self._running
@@ -948,18 +1184,26 @@ class ContinuousScheduler:
         return finished
 
     def run(self) -> List[GenTicket]:
-        """Serve until queue and batch are empty; finished tickets in
-        completion order."""
+        """Serve until queue and batch are empty; terminal tickets in
+        completion order. Sleeps through backoff windows: when every
+        waiting request is backing off, the loop waits for the earliest
+        `not_before_s` instead of spinning or declaring no-progress."""
         done: List[GenTicket] = []
         while self._waiting or self._running:
             before = (len(self._waiting), len(self._running),
-                      self._tokens_out, self._admitted,
-                      self._expired, self._cancelled)
+                      self._tokens_out, self._admitted, self._expired,
+                      self._cancelled, self._failed, self._retries)
             done.extend(self.step())
             after = (len(self._waiting), len(self._running),
-                     self._tokens_out, self._admitted,
-                     self._expired, self._cancelled)
+                     self._tokens_out, self._admitted, self._expired,
+                     self._cancelled, self._failed, self._retries)
             if before == after and self._waiting and not self._running:
+                now = time.perf_counter()
+                wake = [t.not_before_s for t in self._waiting
+                        if t.not_before_s > now]
+                if wake:
+                    time.sleep(min(0.25, min(wake) - now))
+                    continue
                 raise RuntimeError(
                     f"no progress: {len(self._waiting)} waiting but none "
                     "admittable (pool or live-cost budget too small for "
@@ -986,6 +1230,16 @@ class ContinuousScheduler:
             "evicted": self._evicted,
             "expired": self._expired,
             "cancelled": self._cancelled,
+            "failed": self._failed,
+            "retries": self._retries,
+            "latency_spikes": self._spikes,
+            "decode_faults": self._decode_faults,
+            "guard": self.guard,
+            # backend degradations observed at dispatch-trace time
+            "fallbacks": [(f.kind, f.src, f.dst)
+                          for f in self.fault_ledger.fallbacks],
+            "faults": (self.faults.summary()
+                       if self.faults is not None else None),
             "admitted_per_step": list(self._admit_history),
             "evicted_per_step": list(self._evict_history),
             "pending": len(self._waiting),
@@ -1007,91 +1261,284 @@ class ContinuousScheduler:
 
 
 class ReplicaSpread:
-    """Data-parallel front over one `ContinuousScheduler` per mesh data
-    group.
+    """Data-parallel front over one `ContinuousScheduler` per replica,
+    with replica health tracking and failover.
 
-    `engine.data_groups` splits a (data, model) mesh into `data` submeshes
-    of shape (1, model); each gets its *own* `ContinuousScheduler` — its
-    own paged `KVBlockPool` (`num_blocks` is per replica), its own
-    compiled-bucket cache, its own admission state. KV pages never cross a
-    data group: a request's whole lifetime (prefill, every decode step)
-    stays on the replica `submit` routed it to, so tensor-parallel
-    collectives run inside one (1, model) group and no cross-group traffic
-    exists at all.
+    Two placement modes share one code path:
 
-    Routing is least-loaded: a new request goes to the replica with the
-    fewest pending + running requests (ties to the lowest index, so
-    placement is deterministic for a deterministic submit order).
+      * mesh mode     — `engine.data_groups` splits a (data, model) mesh
+        into `data` submeshes of shape (1, model); each gets its *own*
+        `ContinuousScheduler` — its own paged `KVBlockPool` (`num_blocks`
+        is per replica), its own compiled-bucket cache, its own admission
+        state. KV pages never cross a data group, so tensor-parallel
+        collectives run inside one (1, model) group and no cross-group
+        traffic exists at all.
+      * meshless mode — `replicas=N` with no mesh builds N independent
+        single-device schedulers (the chaos harness's failover substrate:
+        no multi-device runtime needed to exercise replica loss).
 
-    The per-request bitwise parity contract is unchanged — each replica is
-    a plain `ContinuousScheduler`, and the shard-map parity contract
-    (tests/test_parallel.py) makes a (1, model) group's tokens identical
-    to a single device's — so *which* replica served a request never shows
-    in its tokens, only in `GenTicket.replica`.
+    Routing is least-loaded over *healthy* replicas: a new request goes
+    to the healthy replica with the fewest pending + running requests
+    (ties to the lowest index, so placement is deterministic for a
+    deterministic submit order). When no replica is healthy, requests
+    wait in an orphan queue and are placed as soon as a probe readmits a
+    replica.
+
+    Failover: a "replica" fault-point fire (or a `TransientError`
+    escaping a replica's step) bumps that replica's consecutive-failure
+    count; at `trip_after` the replica *trips* — it is marked unhealthy,
+    its pool state is abandoned, and every in-flight request is drained:
+    generated tokens fold into `context` (exactly the preemption
+    mechanics), `GenTicket.migrations` increments, and the request
+    re-prefills on the least-loaded surviving replica (orphan queue when
+    none survive). A tripped replica is probed after a capped
+    deterministic backoff (`serve.faults.backoff_s`); a successful probe
+    readmits it and flushes orphans onto it.
+
+    The per-request bitwise parity contract is unchanged for requests the
+    fault path never touched; a migrated request shares preemption's
+    carve-out (one re-prefill of prompt + generated tokens).
     """
 
-    def __init__(self, cfg, params, *, mesh,
-                 config: Optional[E.EngineConfig] = None, **kwargs):
-        from repro.engine import parallel as parlib
-        if config is None:
-            config = E.EngineConfig(row_align=8,
-                                    parallel=parlib.ParallelConfig())
-        if config.parallel is None:
+    def __init__(self, cfg, params, *, mesh: Optional[Any] = None,
+                 replicas: Optional[int] = None,
+                 config: Optional[E.EngineConfig] = None,
+                 faults: Optional[_faults.FaultInjector] = None,
+                 trip_after: int = 2, probe_backoff_s: float = 0.02,
+                 **kwargs):
+        if (mesh is None) == (replicas is None):
             raise ValueError(
-                "ReplicaSpread needs config.parallel (an "
-                "engine.ParallelConfig) describing the mesh's model axis")
-        parlib.check_mesh(mesh, config.parallel)
+                "pass exactly one of mesh= (data-parallel groups) or "
+                "replicas= (meshless independent schedulers)")
+        if mesh is not None:
+            from repro.engine import parallel as parlib
+            if config is None:
+                config = E.EngineConfig(row_align=8, fallback="chain",
+                                        parallel=parlib.ParallelConfig())
+            if config.parallel is None:
+                raise ValueError(
+                    "ReplicaSpread needs config.parallel (an "
+                    "engine.ParallelConfig) describing the mesh's model "
+                    "axis")
+            parlib.check_mesh(mesh, config.parallel)
+            self.groups: Tuple[Any, ...] = parlib.data_groups(mesh)
+        else:
+            if replicas < 1:
+                raise ValueError(f"replicas must be >= 1, got {replicas}")
+            if config is None:
+                config = E.EngineConfig(row_align=8, fallback="chain")
+            self.groups = (None,) * replicas
         self.mesh = mesh
         self.config = config
-        self.groups = parlib.data_groups(mesh)
+        self.faults = faults
+        self.trip_after = int(trip_after)
+        self.probe_backoff_s = float(probe_backoff_s)
         self.replicas: Tuple[ContinuousScheduler, ...] = tuple(
-            ContinuousScheduler(cfg, params, config=config, mesh=g, **kwargs)
-            for g in self.groups)
+            ContinuousScheduler(cfg, params, config=config, mesh=g,
+                                faults=faults, fault_site=f"r{i}:",
+                                **kwargs)
+            for i, g in enumerate(self.groups))
+        # per-replica health: consecutive-failure trip + probe backoff
+        self.health: List[Dict[str, Any]] = [
+            {"healthy": True, "consec_failures": 0, "trips": 0,
+             "probes": 0, "down_until": 0.0}
+            for _ in self.groups]
+        self._orphans: List[GenTicket] = []   # placed once a probe succeeds
+        self._migrations = 0                  # drained-and-replaced tickets
 
     def _load(self, r: ContinuousScheduler) -> int:
         return r.pending() + r.running()
 
+    def _healthy(self) -> List[int]:
+        return [i for i, h in enumerate(self.health) if h["healthy"]]
+
+    def _target(self) -> Optional[int]:
+        """Least-loaded healthy replica index, or None when all are down."""
+        up = self._healthy()
+        if not up:
+            return None
+        return min(up, key=lambda j: (self._load(self.replicas[j]), j))
+
+    def _place(self, t: GenTicket, i: int) -> None:
+        """Adopt ticket `t` into replica `i`'s waiting queue: the rid is
+        reassigned from the target's counter (rid spaces are per replica;
+        the exactly-once invariant rides the ticket's own status)."""
+        r = self.replicas[i]
+        t.rid = r._next_rid
+        r._next_rid += 1
+        t.replica = i
+        t.status = "queued"
+        r._waiting.append(t)
+
+    def _fail_replica(self, i: int, reason: str) -> None:
+        """Trip replica `i`: mark it down with a probe backoff, abandon
+        its pool state, and migrate every queued/running request to the
+        least-loaded surviving replica (orphan queue when none survive).
+        Running requests fold generated tokens into `context` (the
+        preemption mechanics) so one re-prefill rebuilds their cache."""
+        r = self.replicas[i]
+        h = self.health[i]
+        h["healthy"] = False
+        h["trips"] += 1
+        h["consec_failures"] = 0
+        h["down_until"] = time.perf_counter() + backoff_s(
+            h["trips"], base=self.probe_backoff_s, cap=1.0,
+            seed=self.faults.seed if self.faults is not None else 0,
+            token=f"trip:{i}")
+        drained = list(r._running) + list(r._waiting)
+        for t in r._running:
+            r.pool.release(t.rid)
+            t.context = t.context + tuple(t.tokens[len(t.context)
+                                                   - len(t.prompt):])
+            t.migrations += 1
+            self._migrations += 1
+        r._running = []
+        r._waiting = []
+        for t in drained:
+            t.status = "queued"
+            t.not_before_s = 0.0
+            j = self._target()
+            if j is None:
+                t.replica = -1
+                self._orphans.append(t)
+            else:
+                self._place(t, j)
+
+    def _probe(self, i: int) -> bool:
+        """Probe a tripped replica once its backoff expires; on success
+        readmit it (and flush orphans onto it), on failure back off
+        again. The probe consults the "replica" fault point at site
+        `probe:<i>` so chaos schedules can hold a replica down."""
+        h = self.health[i]
+        h["probes"] += 1
+        if self.faults is not None and self.faults.fire(
+                "replica", site=f"probe:{i}"):
+            h["down_until"] = time.perf_counter() + backoff_s(
+                h["trips"] + h["probes"], base=self.probe_backoff_s,
+                cap=1.0, seed=self.faults.seed, token=f"probe:{i}")
+            return False
+        h["healthy"] = True
+        h["consec_failures"] = 0
+        h["down_until"] = 0.0
+        self._flush_orphans()
+        return True
+
+    def _flush_orphans(self) -> None:
+        while self._orphans:
+            j = self._target()
+            if j is None:
+                return
+            self._place(self._orphans.pop(0), j)
+
     def submit(self, prompt: Sequence[int], steps: int,
                timeout_s: Optional[float] = None) -> GenTicket:
-        """Route one request to the least-loaded replica and queue it
-        there; the returned ticket's `replica` records the placement."""
-        i = min(range(len(self.replicas)),
-                key=lambda j: self._load(self.replicas[j]))
-        t = self.replicas[i].submit(prompt, steps, timeout_s)
-        t.replica = i
+        """Route one request to the least-loaded healthy replica and
+        queue it there; the returned ticket's `replica` records the
+        placement (-1 while orphaned: every replica is down and the
+        request waits for a probe to readmit one)."""
+        i = self._target()
+        if i is not None:
+            t = self.replicas[i].submit(prompt, steps, timeout_s)
+            t.replica = i
+            return t
+        r0 = self.replicas[0]
+        norm = r0.validate_request(prompt, steps)
+        now = time.perf_counter()
+        t = GenTicket(rid=-1, prompt=norm, steps=steps, submit_s=now,
+                      context=norm, replica=-1,
+                      deadline_s=None if timeout_s is None
+                      else now + timeout_s)
+        self._orphans.append(t)
         return t
 
     def cancel(self, ticket: GenTicket) -> bool:
+        """Cancel a request wherever it lives: still orphaned (no healthy
+        replica has adopted it), queued, or running on its replica —
+        including a replica currently marked unhealthy (its queues were
+        drained at trip time, so the ticket always lives where
+        `ticket.replica` says)."""
+        if ticket in self._orphans:
+            self._orphans.remove(ticket)
+            ticket.status = "cancelled"
+            ticket.done_s = time.perf_counter()
+            return True
+        if ticket.replica < 0:
+            return False
         return self.replicas[ticket.replica].cancel(ticket)
 
     def pending(self) -> int:
-        return sum(r.pending() for r in self.replicas)
+        return sum(r.pending() for r in self.replicas) + len(self._orphans)
 
     def running(self) -> int:
         return sum(r.running() for r in self.replicas)
 
     def step(self) -> List[GenTicket]:
-        """One scheduling step on every replica (each replica interleaves
-        its own prefills and runs one decode step); finished tickets from
-        all replicas, replica-major."""
+        """One scheduling step on every healthy replica (each replica
+        interleaves its own prefills and runs one decode step), probing
+        tripped replicas whose backoff expired; terminal tickets from all
+        replicas, replica-major. Consults the "replica" fault point at
+        site `replica:<i>` before each replica's step — a fire counts a
+        consecutive failure and trips the replica at `trip_after`."""
+        now = time.perf_counter()
+        if self._orphans and self._healthy():
+            self._flush_orphans()
         done: List[GenTicket] = []
-        for r in self.replicas:
-            if r._waiting or r._running:
-                done.extend(r.step())
+        for i, r in enumerate(self.replicas):
+            h = self.health[i]
+            if not h["healthy"]:
+                if now >= h["down_until"]:
+                    self._probe(i)
+                continue
+            if not (r._waiting or r._running):
+                continue
+            if self.faults is not None and self.faults.fire(
+                    "replica", site=f"replica:{i}"):
+                h["consec_failures"] += 1
+                if h["consec_failures"] >= self.trip_after:
+                    self._fail_replica(i, "injected replica loss")
+                continue
+            try:
+                out = r.step()
+            except TransientError:
+                h["consec_failures"] += 1
+                if h["consec_failures"] >= self.trip_after:
+                    self._fail_replica(i, "transient step failure")
+                continue
+            h["consec_failures"] = 0
+            done.extend(out)
         return done
 
     def run(self) -> List[GenTicket]:
-        """Serve until every replica's queue and batch are empty."""
+        """Serve until every replica's queue and batch are empty and no
+        orphans remain; terminal tickets in completion order. When the
+        only obstacle is time (tripped replicas backing off toward their
+        probe, or requests in a retry backoff window), the loop sleeps
+        instead of declaring no-progress."""
         done: List[GenTicket] = []
         while self.pending() or self.running():
-            before = (self.pending(), self.running(),
+            before = (self.pending(), self.running(), len(self._orphans),
+                      self._migrations, tuple(h["healthy"]
+                                              for h in self.health),
                       sum(r._tokens_out for r in self.replicas),
-                      sum(r._expired + r._cancelled for r in self.replicas))
+                      sum(r._expired + r._cancelled + r._failed
+                          + r._retries for r in self.replicas))
             done.extend(self.step())
-            after = (self.pending(), self.running(),
+            after = (self.pending(), self.running(), len(self._orphans),
+                     self._migrations, tuple(h["healthy"]
+                                             for h in self.health),
                      sum(r._tokens_out for r in self.replicas),
-                     sum(r._expired + r._cancelled for r in self.replicas))
+                     sum(r._expired + r._cancelled + r._failed
+                         + r._retries for r in self.replicas))
             if before == after and self.pending() and not self.running():
+                now = time.perf_counter()
+                waits = [h["down_until"] for h in self.health
+                         if not h["healthy"]]
+                waits += [t.not_before_s for r in self.replicas
+                          for t in r._waiting if t.not_before_s > now]
+                waits = [w for w in waits if w > now]
+                if waits:
+                    time.sleep(min(0.25, min(waits) - now))
+                    continue
                 raise RuntimeError(
                     f"no progress: {self.pending()} waiting but none "
                     "admittable on any replica (per-replica pool or "
@@ -1099,23 +1546,30 @@ class ReplicaSpread:
         return done
 
     def stats(self) -> Dict[str, Any]:
-        """Aggregate counters plus each replica's full `stats()` dict."""
+        """Aggregate counters plus each replica's full `stats()` dict and
+        its health record (trips, probes, consecutive failures)."""
         per = [r.stats() for r in self.replicas]
         wall = sum(s["dispatch_wall_s"] for s in per)
         tokens = sum(s["tokens_out"] for s in per)
         return {
             "replicas": len(self.replicas),
+            "healthy_replicas": len(self._healthy()),
             "tokens_out": tokens,
             "steps": sum(s["steps"] for s in per),
             "admitted": sum(s["admitted"] for s in per),
             "evicted": sum(s["evicted"] for s in per),
             "expired": sum(s["expired"] for s in per),
             "cancelled": sum(s["cancelled"] for s in per),
+            "failed": sum(s["failed"] for s in per),
+            "retries": sum(s["retries"] for s in per),
+            "migrations": self._migrations,
+            "orphans": len(self._orphans),
             "pending": self.pending(),
             "running": self.running(),
             # replicas step in sequence on one host process, so the
             # aggregate wall is the sum of per-replica dispatch time
             "dispatch_wall_s": wall,
             "throughput_tps": tokens / wall if wall else 0.0,
+            "health": [dict(h) for h in self.health],
             "per_replica": per,
         }

@@ -1,0 +1,379 @@
+"""Chaos harness: property tests for the serving stack under seeded
+fault schedules (serve/faults.py).
+
+The three core properties, each asserted under multiple seeds:
+
+  1. exactly-once termination — every submitted ticket ends in exactly
+     one terminal status; the scheduler's in-band `_mark_terminal` gate
+     raises `FatalError` on any double-termination, so completing a run
+     *is* the proof;
+  2. no KV leaks — after the run the block pool is byte-for-byte back to
+     its fresh state: every block free, every allocator table empty,
+     every slot returned (quarantined requests are scrubbed, not just
+     released);
+  3. fault isolation — requests the fault schedule never touched
+     (no retries, no preemptions, no migrations) produce tokens bitwise
+     identical to a fault-free run's.
+
+Plus the degradation chain end-to-end (kernel faults under
+`fallback="chain"` change *nothing* in any ticket's tokens, because the
+backends are pinned bitwise-equal), replica failover on a meshless
+`ReplicaSpread`, the clean path compiling zero guard programs, and the
+deadline/cancel races the fault layer must not regress.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.serve.faults import FatalError, FaultInjector
+from repro.serve.scheduler import (ContinuousScheduler, ReplicaSpread,
+                                   Scheduler)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SEEDS = (1, 7, 23)
+# Mixed prompt lengths and step counts so requests join/leave the decode
+# batch at different steps (same shape as tests/test_continuous.py).
+WORK = [((3, 1, 4, 1, 5), 6), ((9, 2, 6), 12), ((2, 7, 1, 8), 3),
+        ((1, 1, 2, 3, 5, 8), 8)]
+POOL = dict(max_len=32, num_blocks=24, block_size=8, max_batch=4)
+
+
+def make_sched(cfg, params, **kw):
+    return ContinuousScheduler(cfg, params, **POOL, **kw)
+
+
+def pool_fresh_state(s):
+    """The allocator/slot facts that must be restored after any run."""
+    return (s.pool.allocator.free_blocks,
+            sorted(len(tb) for tb in s.pool.allocator.tables.values()),
+            len(s.pool._free_slots))
+
+
+@pytest.fixture(scope="module")
+def clean_tokens(smollm_reduced, smollm_params):
+    """Fault-free reference tokens, keyed by rid (= submit order)."""
+    s = make_sched(smollm_reduced, smollm_params)
+    tickets = [s.submit(p, n) for p, n in WORK]
+    s.run()
+    assert all(t.status == "done" for t in tickets)
+    return {t.rid: tuple(t.tokens) for t in tickets}
+
+
+class TestChaosProperties:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_termination_leaks_and_isolation(self, smollm_reduced,
+                                             smollm_params, clean_tokens,
+                                             seed):
+        # max_fires bounds the blast radius: each fire touches at most
+        # one request, so >= 1 of the 4 is always a clean-run control
+        inj = FaultInjector(seed=seed, rates={
+            "numerics": 0.08, "pool": 0.15, "latency": 0.05},
+            latency_s=0.001, max_fires=3)
+        s = make_sched(smollm_reduced, smollm_params, faults=inj)
+        fresh = pool_fresh_state(s)
+        tickets = [s.submit(p, n) for p, n in WORK]
+        finished = s.run()   # raises FatalError on double-termination
+
+        # 1. exactly-once termination: every ticket terminal, every
+        #    terminal ticket surfaced by step() exactly once
+        assert all(t.status in ("done", "failed") for t in tickets)
+        assert sorted(id(t) for t in finished) \
+            == sorted(id(t) for t in tickets)
+        assert sorted(s._terminated) == sorted(t.rid for t in tickets)
+
+        # 2. no KV leaks: pool allocator byte-for-byte fresh
+        assert pool_fresh_state(s) == fresh
+        assert s.pool.allocator.free_blocks \
+            == s.pool.allocator.num_blocks - 1
+
+        # 3. isolation: untouched requests match the clean run bitwise
+        untouched = [t for t in tickets
+                     if t.status == "done" and t.retries == 0
+                     and t.preemptions == 0 and t.migrations == 0]
+        assert untouched, "seed faulted every request; weaken the rates"
+        for t in untouched:
+            assert tuple(t.tokens) == clean_tokens[t.rid]
+        # and every completed request has exactly its `steps` tokens
+        for t in tickets:
+            if t.status == "done":
+                assert len(t.tokens) == t.steps
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_kernel_chaos_under_chain_is_invisible(self, smollm_reduced,
+                                                   smollm_params,
+                                                   clean_tokens, seed):
+        """Kernel faults answered by the fallback chain never change a
+        token: the chain re-runs the op on a bitwise-equal backend. The
+        last-resort backend ("ref") is pinned fault-free so the chain is
+        never exhausted — exhaustion is its own test in test_faults.py."""
+        inj = FaultInjector(seed=seed, rates={"kernel": 0.25}, schedule={
+            ("kernel", "dense:ref"): (), ("kernel", "gather:ref"): ()})
+        s = make_sched(smollm_reduced, smollm_params, faults=inj,
+                       guard=False)
+        tickets = [s.submit(p, n) for p, n in WORK]
+        s.run()
+        assert all(t.status == "done" for t in tickets)
+        for t in tickets:
+            assert tuple(t.tokens) == clean_tokens[t.rid]
+        # the hops were real and recorded
+        if inj.fired["kernel"]:
+            st = s.stats()
+            assert st["fallbacks"] and all(
+                src != dst for _, src, dst in st["fallbacks"])
+
+    def test_pool_storm_retries_with_backoff(self, smollm_reduced,
+                                             smollm_params, clean_tokens):
+        """An admission-time pool storm requeues the request with
+        deterministic backoff; it completes once the storm passes."""
+        inj = FaultInjector(seed=3, schedule={("pool", "0"): (0, 1)})
+        s = make_sched(smollm_reduced, smollm_params, faults=inj,
+                       guard=False)
+        t = s.submit(*WORK[0])
+        s.run()
+        assert t.status == "done" and t.retries == 2
+        assert s.stats()["retries"] == 2
+        # a retried admission re-prefills the same prompt: tokens match
+        assert tuple(t.tokens) == clean_tokens[t.rid]
+
+    def test_retry_budget_exhaustion_fails_cleanly(self, smollm_reduced,
+                                                   smollm_params):
+        inj = FaultInjector(seed=3, schedule={
+            ("pool", "0"): tuple(range(10))})
+        s = make_sched(smollm_reduced, smollm_params, faults=inj,
+                       guard=False, max_retries=2)
+        fresh = pool_fresh_state(s)
+        t = s.submit(*WORK[0])
+        s.run()
+        assert t.status == "failed" and "retry budget exhausted" in t.error
+        assert pool_fresh_state(s) == fresh
+
+    def test_quarantine_preserves_batchmates(self, smollm_reduced,
+                                             smollm_params, clean_tokens):
+        """Poison one request's decode logits mid-batch: it fails, its
+        blocks are scrubbed, and every batchmate's tokens stay bitwise
+        identical to the clean run."""
+        inj = FaultInjector(seed=0, schedule={("numerics", "1"): (2,)})
+        s = make_sched(smollm_reduced, smollm_params, faults=inj)
+        fresh = pool_fresh_state(s)
+        tickets = [s.submit(p, n) for p, n in WORK]
+        s.run()
+        by_rid = {t.rid: t for t in tickets}
+        assert by_rid[1].status == "failed"
+        assert "non-finite" in by_rid[1].error
+        for rid, t in by_rid.items():
+            if rid != 1:
+                assert t.status == "done"
+                assert tuple(t.tokens) == clean_tokens[rid]
+        assert pool_fresh_state(s) == fresh
+
+    def test_double_termination_raises_fatal(self, smollm_reduced,
+                                             smollm_params):
+        s = make_sched(smollm_reduced, smollm_params)
+        t = s.submit(*WORK[0])
+        s.run()
+        assert t.status == "done"
+        with pytest.raises(FatalError, match="terminated twice|re-term"):
+            s._mark_terminal(t, "failed")
+
+
+class TestReplicaFailover:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_replica_loss_migrates_and_completes(self, smollm_reduced,
+                                                 smollm_params, seed):
+        inj = FaultInjector(seed=seed, schedule={
+            ("replica", "replica:0"): (2, 3)})
+        sp = ReplicaSpread(smollm_reduced, smollm_params, replicas=2,
+                           **POOL, faults=inj, trip_after=2,
+                           probe_backoff_s=0.005)
+        tickets = [sp.submit(p, n) for p, n in WORK]
+        sp.run()
+        st = sp.stats()
+        assert all(t.status == "done" for t in tickets)
+        assert all(len(t.tokens) == t.steps for t in tickets)
+        assert st["health"][0]["trips"] == 1
+        assert st["healthy_replicas"] == 2      # probe readmitted it
+        # the lost replica's pool was abandoned; the survivors' pools
+        # are clean
+        for r in sp.replicas:
+            assert not r._running and not r._waiting
+
+    def test_all_replicas_down_orphans_then_recovers(self, smollm_reduced,
+                                                     smollm_params):
+        inj = FaultInjector(seed=5, schedule={
+            ("replica", "replica:0"): (0,), ("replica", "replica:1"): (0,),
+            ("replica", "probe:0"): (0,), ("replica", "probe:1"): (0,)})
+        sp = ReplicaSpread(smollm_reduced, smollm_params, replicas=2,
+                           **POOL, faults=inj, trip_after=1,
+                           probe_backoff_s=0.002)
+        tickets = [sp.submit(p, n) for p, n in WORK]
+        sp.run()
+        assert all(t.status == "done" for t in tickets)
+        assert sp.stats()["orphans"] == 0
+        assert sp.stats()["healthy_replicas"] == 2
+        # both replicas tripped AND failed their first probe
+        assert [h["trips"] for h in sp.stats()["health"]] == [1, 1]
+        assert all(h["probes"] >= 2 for h in sp.stats()["health"])
+
+    def test_unmigrated_tokens_bitwise_stable_across_failover(
+            self, smollm_reduced, smollm_params):
+        clean = ReplicaSpread(smollm_reduced, smollm_params, replicas=2,
+                              **POOL)
+        ct = [clean.submit(p, n) for p, n in WORK]
+        clean.run()
+        inj = FaultInjector(seed=11, schedule={
+            ("replica", "replica:0"): (3, 4)})
+        sp = ReplicaSpread(smollm_reduced, smollm_params, replicas=2,
+                           **POOL, faults=inj, trip_after=2,
+                           probe_backoff_s=0.005)
+        ft = [sp.submit(p, n) for p, n in WORK]
+        sp.run()
+        assert sp.stats()["migrations"] >= 1
+        for a, b in zip(ct, ft):
+            assert b.status == "done" and len(b.tokens) == b.steps
+            if b.migrations == 0:
+                assert tuple(b.tokens) == tuple(a.tokens)
+
+    def test_meshless_requires_exactly_one_mode(self, smollm_reduced,
+                                                smollm_params):
+        with pytest.raises(ValueError, match="exactly one"):
+            ReplicaSpread(smollm_reduced, smollm_params, **POOL)
+
+
+class TestCleanPathUnchanged:
+    def test_no_guard_programs_without_injector(self, smollm_reduced,
+                                                smollm_params):
+        """faults=None compiles the unguarded programs — fault tolerance
+        adds zero dispatches and zero program changes to the clean path."""
+        s = make_sched(smollm_reduced, smollm_params)
+        assert s.guard is False
+        t = s.submit(*WORK[0])
+        s.run()
+        assert t.status == "done"
+        for net in list(s._decode.values()) + list(s._prefill.values()):
+            assert "-guard" not in net.program.name
+        st = s.stats()
+        assert st["fallbacks"] == [] and st["faults"] is None
+        assert st["latency_spikes"] == 0 and st["decode_faults"] == 0
+
+    def test_guard_opt_in_without_injector(self, smollm_reduced,
+                                           smollm_params, clean_tokens):
+        """guard=True with no injector: guard programs run but nothing
+        fires — tokens stay bitwise identical to the unguarded run."""
+        s = make_sched(smollm_reduced, smollm_params, guard=True)
+        tickets = [s.submit(p, n) for p, n in WORK]
+        s.run()
+        for t in tickets:
+            assert t.status == "done"
+            assert tuple(t.tokens) == clean_tokens[t.rid]
+        for net in s._decode.values():
+            assert "-guard" in net.program.name
+
+
+class TestDeadlineCancelRaces:
+    """Satellite: the admission/expiry/cancel interleavings the fault
+    layer must not regress."""
+
+    @staticmethod
+    def _toy_program():
+        def fn(x):
+            return jnp.tanh(x) * 2.0
+
+        def avals(b):
+            return (jax.ShapeDtypeStruct((b, 4), jnp.float32),)
+
+        return E.trace_program(
+            fn, *avals(1), name="toy", batch_size=1,
+            batch_axes=E.infer_batch_axes(avals(1), avals(2)))
+
+    def test_cancel_after_batch_dispatch_is_refused(self):
+        """A ticket whose batch already ran cannot be cancelled — the
+        result is retained and the cancel reports False."""
+        s = Scheduler(max_batch=2)
+        s.register("net", self._toy_program())
+        t = s.submit("net", jnp.ones((1, 4), jnp.float32))
+        served = s.step()
+        assert t in served and t.done
+        assert s.cancel(t) is False
+        assert t.result is not None and not t.cancelled
+
+    def test_deadline_expiring_between_admission_and_run(self):
+        """A ticket admitted with a deadline that passes before any step
+        expires instead of running — even though admission accepted it."""
+        s = Scheduler()
+        s.register("net", self._toy_program())
+        t = s.submit("net", jnp.ones((1, 4), jnp.float32),
+                     timeout_s=0.005)
+        assert s.pending() == 1
+        time.sleep(0.02)
+        assert s.step() == []
+        assert t.expired and not t.done and s.pending() == 0
+
+    def test_continuous_deadline_expires_between_admit_and_decode(
+            self, smollm_reduced, smollm_params):
+        """A running request whose deadline lapses between decode steps
+        is expired exactly once and its blocks return to the pool."""
+        s = make_sched(smollm_reduced, smollm_params)
+        fresh = pool_fresh_state(s)
+        t = s.submit((1, 2, 3), 20, timeout_s=0.05)
+        s.step()                      # admits (prefill) + first decode
+        assert t.status == "running"
+        time.sleep(0.08)
+        s.step()
+        assert t.status == "expired"
+        assert pool_fresh_state(s) == fresh
+        assert s._terminated == {t.rid: "expired"}
+
+    def test_cancel_running_during_fault_storm(self, smollm_reduced,
+                                               smollm_params):
+        """Cancelling a running request mid-storm frees its blocks and
+        the storm's retries never resurrect it."""
+        inj = FaultInjector(seed=9, rates={"pool": 0.3})
+        s = make_sched(smollm_reduced, smollm_params, faults=inj,
+                       guard=False)
+        fresh = pool_fresh_state(s)
+        t = s.submit((1, 2, 3), 16)
+        for _ in range(6):            # a few steps through the storm
+            s.step()
+            if t.status == "running":
+                break
+        if t.status == "running":
+            assert s.cancel(t) is True
+        else:                         # storm kept it queued: cancel there
+            assert s.cancel(t) is True
+        assert t.status == "cancelled"
+        s.run()
+        assert t.status == "cancelled"      # exactly-once: still cancelled
+        assert pool_fresh_state(s) == fresh
+
+    def test_spread_cancel_and_stats_with_unhealthy_replica(
+            self, smollm_reduced, smollm_params):
+        """Cancel must find a ticket routed to a replica that has since
+        tripped (the ticket migrated with the drain), and stats() must
+        stay well-formed while a replica is down."""
+        inj = FaultInjector(seed=2, schedule={
+            ("replica", "replica:0"): (0, 1),
+            ("replica", "probe:0"): tuple(range(50))})
+        sp = ReplicaSpread(smollm_reduced, smollm_params, replicas=2,
+                           **POOL, faults=inj, trip_after=2,
+                           probe_backoff_s=0.002)
+        tickets = [sp.submit(p, n) for p, n in WORK]
+        on_r0 = [t for t in tickets if t.replica == 0]
+        assert on_r0
+        sp.step()                     # fire 1: consecutive-failure count
+        sp.step()                     # fire 2: trip + drain to replica 1
+        st = sp.stats()
+        assert st["healthy_replicas"] == 1
+        assert st["health"][0]["healthy"] is False
+        victim = on_r0[0]
+        assert victim.replica == 1    # migrated by the drain
+        assert sp.cancel(victim) is True
+        assert victim.status == "cancelled"
+        rest = [t for t in tickets if t is not victim]
+        sp.run()
+        assert all(t.status == "done" for t in rest)
+        assert victim.status == "cancelled"

@@ -1,0 +1,177 @@
+"""Unit tests for the fault-injection layer (serve/faults.py) and the
+dispatch degradation chain (engine/dispatch.py).
+
+The chaos harness (tests/test_chaos.py) exercises these end-to-end
+through the schedulers; this file pins the primitives: deterministic
+fire decisions, exact schedules, capped deterministic backoff, the
+pallas -> xla -> ref fallback chain recording `Ledger.fallbacks`, and
+the zero-overhead contract of the disabled path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.engine import dispatch
+from repro.serve import faults
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestInjectorDeterminism:
+    def test_same_seed_same_schedule(self):
+        def pattern(inj):
+            return [inj.fire("numerics", site=f"req:{i % 3}")
+                    for i in range(64)]
+        a = pattern(faults.FaultInjector(seed=42,
+                                         rates={"numerics": 0.3}))
+        b = pattern(faults.FaultInjector(seed=42,
+                                         rates={"numerics": 0.3}))
+        assert a == b and any(a) and not all(a)
+
+    def test_different_seeds_differ(self):
+        def pattern(seed):
+            inj = faults.FaultInjector(seed=seed, rates={"pool": 0.5})
+            return [inj.fire("pool", site="r0") for _ in range(64)]
+        assert pattern(1) != pattern(2)
+
+    def test_visit_counters_are_per_site(self):
+        inj = faults.FaultInjector(seed=0, rates={"kernel": 0.5})
+        inj.fire("kernel", site="a")
+        inj.fire("kernel", site="a")
+        inj.fire("kernel", site="b")
+        assert inj.visits == {("kernel", "a"): 2, ("kernel", "b"): 1}
+
+    def test_schedule_pins_exact_visits(self):
+        inj = faults.FaultInjector(schedule={("kernel", "dense:xla"):
+                                             (1, 3)})
+        got = [inj.fire("kernel", site="dense:xla") for _ in range(5)]
+        assert got == [False, True, False, True, False]
+        # other sites of the same point stay rate-driven (rate 0 = never)
+        assert not inj.fire("kernel", site="conv2d:xla")
+
+    def test_max_fires_quiesces(self):
+        inj = faults.FaultInjector(rates={"latency": 1.0}, max_fires=2)
+        got = [inj.fire("latency") for _ in range(5)]
+        assert got == [True, True, False, False, False]
+        assert inj.total_fired == 2
+
+    def test_unknown_point_rejected(self):
+        inj = faults.FaultInjector()
+        with pytest.raises(ValueError, match="unknown fault point"):
+            inj.fire("cosmic-ray")
+        with pytest.raises(ValueError, match="unknown fault point"):
+            faults.FaultInjector(rates={"cosmic-ray": 1.0})
+        with pytest.raises(ValueError, match="unknown fault point"):
+            faults.FaultInjector(schedule={("cosmic-ray", ""): (0,)})
+
+    def test_latency_returns_spike_or_zero(self):
+        inj = faults.FaultInjector(schedule={("latency", "step"): (1,)},
+                                   latency_s=0.25)
+        assert inj.latency("step") == 0.0
+        assert inj.latency("step") == 0.25
+
+    def test_events_record_fired_visits(self):
+        inj = faults.FaultInjector(schedule={("pool", "r0:5"): (2,)})
+        for _ in range(3):
+            inj.fire("pool", site="r0:5")
+        assert [(e.point, e.site, e.visit) for e in inj.events] \
+            == [("pool", "r0:5", 2)]
+
+
+class TestBackoff:
+    def test_deterministic_and_capped(self):
+        a = [faults.backoff_s(k, base=0.01, cap=0.5, seed=3, token="r1")
+             for k in range(1, 12)]
+        b = [faults.backoff_s(k, base=0.01, cap=0.5, seed=3, token="r1")
+             for k in range(1, 12)]
+        assert a == b
+        assert all(w <= 0.5 for w in a)
+        # jitter multiplier lives in [0.5, 1.0): bounded both sides
+        for k, w in enumerate(a, start=1):
+            raw = min(0.5, 0.01 * 2 ** (k - 1))
+            assert 0.5 * raw <= w < raw
+
+    def test_distinct_tokens_decorrelate(self):
+        xs = [faults.backoff_s(3, seed=0, token=f"r{i}") for i in range(8)]
+        assert len(set(xs)) == len(xs)
+
+    def test_attempt_zero_is_free(self):
+        assert faults.backoff_s(0) == 0.0
+
+
+class TestActivation:
+    def test_injecting_restores_previous(self):
+        assert faults.active() is None
+        outer = faults.FaultInjector(seed=1)
+        inner = faults.FaultInjector(seed=2)
+        with faults.injecting(outer):
+            assert faults.active() is outer
+            with faults.injecting(inner):
+                assert faults.active() is inner
+            assert faults.active() is outer
+        assert faults.active() is None
+
+    def test_install_uninstall(self):
+        inj = faults.FaultInjector()
+        faults.install(inj)
+        assert faults.active() is inj
+        faults.install(None)
+        assert faults.active() is None
+
+
+class TestDispatchFallback:
+    """The degradation chain at the one dispatch chokepoint: an op whose
+    planned backend faults re-runs on the next backend in
+    pallas -> xla -> ref, records the hop, and — because the three
+    backends are pinned bitwise-equal — returns the identical result."""
+
+    def _xw(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(0))
+        return (jax.random.normal(kx, (8, 64), jnp.float32),
+                jax.random.normal(kw, (64, 32), jnp.float32))
+
+    def test_chain_is_declared(self):
+        assert dispatch.fallback_chain("pallas") == ("xla", "ref")
+        assert dispatch.fallback_chain("xla") == ("ref",)
+        assert dispatch.fallback_chain("ref") == ()
+
+    def test_kernel_fault_degrades_bitwise_equal(self):
+        x, w = self._xw()
+        clean = E.dense(x, w)
+        inj = faults.FaultInjector(schedule={("kernel", "dense:xla"): (0,)})
+        with E.using_config(E.EngineConfig(fallback="chain")):
+            with faults.injecting(inj), E.tracking() as led:
+                out = E.dense(x, w)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(clean))
+        assert [(f.kind, f.src, f.dst) for f in led.fallbacks] \
+            == [("dense", "xla", "ref")]
+        assert inj.fallbacks == [("dense", "xla", "ref")]
+
+    def test_fail_stop_without_chain(self):
+        x, w = self._xw()
+        inj = faults.FaultInjector(schedule={("kernel", "dense:xla"): (0,)})
+        with faults.injecting(inj):
+            with pytest.raises(faults.KernelFault):
+                E.dense(x, w)       # default fallback="none": fail-stop
+
+    def test_chain_exhausted_reraises(self):
+        x, w = self._xw()
+        inj = faults.FaultInjector(schedule={
+            ("kernel", "dense:xla"): (0,), ("kernel", "dense:ref"): (0,)})
+        with E.using_config(E.EngineConfig(fallback="chain")):
+            with faults.injecting(inj):
+                with pytest.raises(faults.KernelFault):
+                    E.dense(x, w)
+
+    def test_clean_path_records_nothing(self):
+        x, w = self._xw()
+        with E.using_config(E.EngineConfig(fallback="chain")):
+            with E.tracking() as led:
+                E.dense(x, w)
+        assert led.fallbacks == []
+
+    def test_fallback_config_validated(self):
+        with pytest.raises(ValueError, match="fallback"):
+            E.EngineConfig(fallback="retry")

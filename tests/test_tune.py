@@ -339,3 +339,79 @@ class TestTuneCache:
     def test_invalid_tuning_mode_rejected(self):
         with pytest.raises(ValueError, match="tuning mode"):
             E.EngineConfig(tuning="always")
+
+
+class TestAtomicSave:
+    """Crash-safety of `.tuning/<device_kind>.json` writes: a save that
+    dies at any point leaves either the previous cache or the new one on
+    disk — never a truncated JSON — and never litters temp files."""
+
+    def _fill(self, entries):
+        cache = tune.load_cache()
+        cache["entries"].clear()
+        cache["entries"].update(entries)
+        return cache
+
+    def test_crash_before_replace_preserves_old_cache(self, tune_dir,
+                                                      monkeypatch):
+        self._fill({"k0": {"kind": "dense", "tile": [8, 128, 128]}})
+        tune.save_cache()
+        old = tune.cache_path().read_text()
+
+        self._fill({"k1": {"kind": "dense", "tile": [16, 256, 256]}})
+
+        def crash(src, dst):
+            raise OSError("simulated crash before rename")
+        monkeypatch.setattr(tune.os, "replace", crash)
+        with pytest.raises(OSError, match="simulated crash"):
+            tune.save_cache()
+        monkeypatch.undo()
+
+        # the old cache file is intact (still the previous, valid JSON)
+        assert tune.cache_path().read_text() == old
+        assert json.loads(old)["entries"].keys() == {"k0"}
+        # and the aborted writer unlinked its temp file
+        assert [p.name for p in tune_dir.iterdir()] \
+            == [tune.cache_path().name]
+        # a later save lands the new content atomically
+        tune.save_cache()
+        assert json.loads(
+            tune.cache_path().read_text())["entries"].keys() == {"k1"}
+
+    def test_crash_mid_write_never_truncates(self, tune_dir, monkeypatch):
+        self._fill({"k0": {"kind": "dense", "tile": [8, 128, 128]}})
+        tune.save_cache()
+        old = tune.cache_path().read_text()
+
+        self._fill({"k1": {"kind": "dense", "tile": [16, 256, 256]}})
+
+        def crash(fd):
+            raise OSError("simulated crash mid-write")
+        monkeypatch.setattr(tune.os, "fsync", crash)
+        with pytest.raises(OSError, match="simulated crash"):
+            tune.save_cache()
+        monkeypatch.undo()
+
+        # the visible cache never saw the half-written payload
+        assert tune.cache_path().read_text() == old
+        assert not list(tune_dir.glob("*.tmp"))
+        # and load_cache (fresh memo) still parses it
+        tune.set_cache_dir(tune_dir)
+        assert tune.load_cache()["entries"].keys() == {"k0"}
+
+    def test_unique_temp_names(self, tune_dir, monkeypatch):
+        """Two interleaved savers must not share one temp path (the old
+        fixed `.json.tmp` name made a slow writer clobber a fast one)."""
+        seen = []
+        import tempfile as _tempfile
+        orig = _tempfile.mkstemp
+
+        def spy(*a, **kw):
+            fd, name = orig(*a, **kw)
+            seen.append(name)
+            return fd, name
+        monkeypatch.setattr(_tempfile, "mkstemp", spy)
+        self._fill({"k0": {"kind": "dense", "tile": [8, 128, 128]}})
+        tune.save_cache()
+        tune.save_cache()
+        assert len(seen) == 2 and seen[0] != seen[1]
