@@ -1,0 +1,8 @@
+import sys
+
+from repro.analyze.cli import main
+
+try:
+    sys.exit(main())
+except BrokenPipeError:            # `... | head` closed stdout mid-print
+    sys.exit(0)

@@ -1,0 +1,143 @@
+"""`python -m repro.analyze` — the static-analysis entry point.
+
+Default run sweeps layer 1 (every registered model program x a config
+matrix spanning the engine's planning axes) and layer 2 (the AST linter
+over `src/repro/`), prints findings, and exits 1 when any error-severity
+finding is present (the CI gate). Flags:
+
+  --rules           print the rule catalog (id, severity, layer, contract)
+  --tuning [--fix]  doctor the committed `.tuning/` caches; with --fix,
+                    drop error-class entries and rewrite the file
+  --verify-only     layer 1 only        --ast-only   layer 2 only
+  --programs a,b    restrict the sweep to named programs
+  --json PATH       also write the full report as stable JSON (artifact)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.engine.config import EngineConfig
+from repro.engine.parallel import ParallelConfig
+
+from repro.analyze import rules_tile
+from repro.analyze.diagnostics import Report, catalog
+from repro.analyze.rules_ast import default_root, lint_tree
+from repro.analyze.verify import verify_program
+
+# The config matrix spans every planning axis the verifier has rules for:
+# backend selection, tuning-cache resolution (both precisions), row
+# alignment, the fallback chain, and model-parallel placement.
+CONFIG_MATRIX = (
+    ("default", EngineConfig()),
+    ("pallas-cached", EngineConfig(backend="pallas", tuning="cached")),
+    ("auto-cached", EngineConfig(backend="pallas", policy="auto",
+                                 tuning="cached")),
+    ("int8-cached", EngineConfig(backend="pallas", precision="int8",
+                                 tuning="cached")),
+    ("row-aligned", EngineConfig(row_align=8)),
+    ("chain", EngineConfig(backend="pallas", fallback="chain")),
+    ("tp2-auto", EngineConfig(parallel=ParallelConfig(model=2))),
+    ("tp4-auto", EngineConfig(parallel=ParallelConfig(model=4))),
+)
+
+
+def _programs(only: Optional[List[str]]):
+    from repro.models import cnn
+    names = sorted(cnn.CNNS) if not only else only
+    return [(name, cnn.program(name)) for name in names]
+
+
+def run_verify(only: Optional[List[str]] = None) -> Report:
+    report = Report()
+    for pname, program in _programs(only):
+        for cname, cfg in CONFIG_MATRIX:
+            sub = verify_program(program, cfg)
+            for d in sub:
+                # qualify the site with the matrix cell it came from
+                report.add(dataclasses.replace(d, site=f"[{cname}] {d.site}"))
+    return report
+
+
+def run_tuning(fix: bool, repo_root: Path) -> Report:
+    from repro.models import cnn
+    report = Report()
+    ops = [op for name in sorted(cnn.CNNS)
+           for op in cnn.program(name).ops]
+    known = rules_tile.derivable_keys(ops, accums=(None, "fp32"))
+    tuning_dir = repo_root / ".tuning"
+    if not tuning_dir.is_dir():
+        return report
+    for path in sorted(tuning_dir.glob("*.json")):
+        diags, repaired = rules_tile.doctor_cache(path, known_keys=known,
+                                                  repair=fix)
+        report.extend(diags)
+        if repaired is not None:
+            path.write_text(json.dumps(repaired, indent=2, sort_keys=True)
+                            + "\n")
+            print(f"repaired {path}: dropped "
+                  f"{len(diags)} flagged entr(y/ies)")
+    return report
+
+
+def print_rules() -> None:
+    rules = catalog()
+    wid = max(len(r.id) for r in rules)
+    for r in rules:
+        print(f"{r.id:<{wid}}  {r.severity:<5}  {r.layer:<5}  {r.contract}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analyze",
+        description="static contract verifier + repo invariant linter")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--tuning", action="store_true",
+                    help="doctor the .tuning/ caches instead of the sweep")
+    ap.add_argument("--fix", action="store_true",
+                    help="with --tuning: drop error-class cache entries")
+    ap.add_argument("--verify-only", action="store_true",
+                    help="run only the layer-1 program verifier")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="run only the layer-2 AST linter")
+    ap.add_argument("--programs", default=None,
+                    help="comma-separated program names to sweep")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the report as JSON")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        print_rules()
+        return 0
+
+    report = Report()
+    if args.tuning:
+        repo_root = default_root().parents[1]
+        report.merge(run_tuning(args.fix, repo_root))
+    else:
+        only = args.programs.split(",") if args.programs else None
+        if not args.ast_only:
+            report.merge(run_verify(only))
+        if not args.verify_only:
+            report.merge(lint_tree())
+
+    print(report.render())
+    counts = report.to_dict()["counts"]
+    print(f"-- {counts['error']} error(s), {counts['warn']} warning(s), "
+          f"{counts['info']} info")
+    if args.json:
+        Path(args.json).write_text(report.to_json() + "\n")
+        print(f"wrote {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:        # `... | head` closed stdout mid-print
+        sys.exit(0)

@@ -1,0 +1,159 @@
+"""Shared diagnostics model of the static contract verifier.
+
+Every rule in `repro.analyze` — plan/program verifier (layer 1) and AST
+repo linter (layer 2) — reports through one `Diagnostic` shape: a stable
+rule id, a severity, a location (op site or file:line), a human message and
+a machine-actionable fix hint. Reports aggregate diagnostics, gate on
+error-severity findings, and serialize to stable JSON (the CI artifact).
+
+The rule *catalog* also lives here: one `Rule` per id, with its default
+severity and one-line contract statement. The catalog is the machine-read
+twin of the README's rule table — `python -m repro.analyze --rules` prints
+it, and tests assert every implemented rule is cataloged (and vice versa),
+so the documentation cannot drift from the implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+SEVERITIES = ("error", "warn", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding of one rule at one site."""
+
+    rule: str                       # stable rule id, e.g. "shard-indivisible"
+    severity: str                   # "error" | "warn" | "info"
+    site: str                       # "program:op[3] conv2d" or "file.py:42"
+    message: str                    # what is wrong, concretely
+    fix: str = ""                   # how to make it go away
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; "
+                             f"expected one of {SEVERITIES}")
+
+    def to_dict(self) -> Dict[str, str]:
+        return {"rule": self.rule, "severity": self.severity,
+                "site": self.site, "message": self.message, "fix": self.fix}
+
+    def __str__(self) -> str:
+        tail = f" [fix: {self.fix}]" if self.fix else ""
+        return f"{self.severity}:{self.rule} @ {self.site}: {self.message}" \
+            + tail
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """Catalog entry: the contract one rule id enforces."""
+
+    id: str
+    severity: str                   # default severity of findings
+    layer: str                      # "plan" | "tile" | "shard" | "ast"
+    contract: str                   # one-line statement of the invariant
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+
+_CATALOG: Dict[str, Rule] = {}  # analyze: allow[mutable-global] import-time rule registry, append-only
+
+
+def register_rule(rule: Rule) -> Rule:
+    if rule.id in _CATALOG:
+        raise ValueError(f"rule {rule.id!r} registered twice")
+    _CATALOG[rule.id] = rule
+    return rule
+
+
+def catalog() -> Tuple[Rule, ...]:
+    return tuple(_CATALOG[k] for k in sorted(_CATALOG))
+
+
+def get_rule(rule_id: str) -> Rule:
+    return _CATALOG[rule_id]
+
+
+def finding(rule_id: str, site: str, message: str, fix: str = "",
+            severity: Optional[str] = None) -> Diagnostic:
+    """A `Diagnostic` for a cataloged rule (severity defaults to the
+    catalog's; rules may override per finding, e.g. doctor repairs)."""
+    rule = _CATALOG[rule_id]
+    return Diagnostic(rule=rule_id, severity=severity or rule.severity,
+                      site=site, message=message, fix=fix)
+
+
+class Report:
+    """An ordered collection of diagnostics with gating helpers."""
+
+    def __init__(self, diagnostics: Iterable[Diagnostic] = ()) -> None:
+        self.diagnostics: List[Diagnostic] = list(diagnostics)
+
+    def add(self, diag: Diagnostic) -> None:
+        self.diagnostics.append(diag)
+
+    def extend(self, diags: Iterable[Diagnostic]) -> None:
+        self.diagnostics.extend(diags)
+
+    def merge(self, other: "Report") -> "Report":
+        self.diagnostics.extend(other.diagnostics)
+        return self
+
+    def __iter__(self) -> Iterator[Diagnostic]:
+        return iter(self.diagnostics)
+
+    def __len__(self) -> int:
+        return len(self.diagnostics)
+
+    @property
+    def errors(self) -> Tuple[Diagnostic, ...]:
+        return tuple(d for d in self.diagnostics if d.severity == "error")
+
+    @property
+    def warnings(self) -> Tuple[Diagnostic, ...]:
+        return tuple(d for d in self.diagnostics if d.severity == "warn")
+
+    @property
+    def ok(self) -> bool:
+        """True when no error-severity finding is present (the CI gate)."""
+        return not self.errors
+
+    def by_rule(self) -> Dict[str, Tuple[Diagnostic, ...]]:
+        out: Dict[str, List[Diagnostic]] = {}
+        for d in self.diagnostics:
+            out.setdefault(d.rule, []).append(d)
+        return {k: tuple(v) for k, v in out.items()}
+
+    def to_dict(self) -> Dict[str, object]:
+        counts = {s: 0 for s in SEVERITIES}
+        for d in self.diagnostics:
+            counts[d.severity] += 1
+        return {"counts": counts, "ok": self.ok,
+                "diagnostics": [d.to_dict() for d in self.diagnostics]}
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    def render(self) -> str:
+        if not self.diagnostics:
+            return "no findings"
+        return "\n".join(str(d) for d in self.diagnostics)
+
+
+class AnalyzeError(ValueError):
+    """Raised by `engine.compile(verify="error")` when the verifier finds
+    error-severity contract violations. Carries the full report."""
+
+    def __init__(self, report: Report) -> None:
+        self.report = report
+        errs = report.errors
+        head = f"{len(errs)} contract violation(s):\n"
+        super().__init__(head + "\n".join(str(d) for d in errs))
+
+
+class AnalyzeWarning(UserWarning):
+    """Emitted per finding by `engine.compile(verify="warn")`."""

@@ -1,0 +1,266 @@
+"""Plan/program/config contract rules (layer 1).
+
+The contracts PRs 2-9 established around planning and compilation, each
+decidable from `OpSpec` graphs, `EngineConfig`s and avals alone:
+
+  * int8 scope — `EngineConfig(precision="int8")` silently downgrades ops
+    outside the contract (non-canonical einsums, depthwise conv1d,
+    gather) to fp32; the verifier surfaces every such downgrade, and an
+    *explicit* per-op `precision="int8"` on an unsupported op is a hard
+    error (the runtime would raise mid-trace);
+  * epilogue legality — a fused bias needs a weight-side (w-free)
+    trailing output label; activations must come from the registry;
+  * batch-invariant tuning keys — re-derive every op's tile key at two
+    batch sizes and diff: a key that moves with the batch breaks the
+    scheduler's bitwise batched-vs-solo parity contract;
+  * donation safety — a donated argument must have a shape/dtype-matching
+    output leaf to reuse its buffer (the paged-KV pool pattern); donating
+    reused weights is a hazard that surfaces as a deleted-buffer crash at
+    the second call;
+  * fallback-chain parity — `fallback="chain"` is only results-safe over
+    the built-in backends whose bitwise parity is pinned by the test
+    suites; a chain configured over an unpinned custom backend silently
+    has no hops (or unpinned ones).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.engine import dispatch
+from repro.engine import plan as planlib
+from repro.engine import tune as tunelib
+from repro.engine.config import EngineConfig
+from repro.engine.plan import OpSpec
+
+from repro.analyze.diagnostics import Diagnostic, Rule, finding, register_rule
+
+register_rule(Rule(
+    id="int8-silent-downgrade", severity="warn", layer="plan",
+    contract="config-level precision='int8' silently runs fp32 on ops "
+             "outside the int8 contract (non-canonical einsums, depthwise "
+             "conv1d, gather) — surfaced so quantization coverage is a "
+             "decision, not an accident"))
+register_rule(Rule(
+    id="int8-unsupported-op", severity="error", layer="plan",
+    contract="an explicit per-op precision='int8' is only legal on conv2d "
+             "and canonical-GEMM dense ops; anything else raises at trace "
+             "time"))
+register_rule(Rule(
+    id="epilogue-illegal-form", severity="error", layer="plan",
+    contract="a fused epilogue bias needs a weight-side (w-free) trailing "
+             "output label, a (n_out,) bias shape, and a registered "
+             "activation"))
+register_rule(Rule(
+    id="tuning-key-batch-variant", severity="error", layer="plan",
+    contract="tile-cache keys must be batch-invariant: the same op "
+             "re-derived at two batch sizes must resolve the same key, or "
+             "batched and solo execution tune apart and bitwise parity "
+             "dies"))
+register_rule(Rule(
+    id="donation-hazard", severity="error", layer="plan",
+    contract="a donated argument needs a shape/dtype-matching output leaf "
+             "to reuse its buffer; donating a reused (weight) buffer "
+             "crashes on the second call"))
+register_rule(Rule(
+    id="fallback-chain-unpinned", severity="error", layer="plan",
+    contract="fallback='chain' is results-safe only over backends with "
+             "pinned bitwise parity (the built-in pallas->xla->ref "
+             "chain); a chain over an unpinned backend has no safe hops"))
+register_rule(Rule(
+    id="program-capture-failed", severity="error", layer="plan",
+    contract="a registered program's forward must shape-trace cleanly at "
+             "its recorded avals; a capture-time exception means the "
+             "program cannot compile at all"))
+
+
+# ---------------------------------------------------------------------------
+# precision scope
+# ---------------------------------------------------------------------------
+
+def check_op_precision(op: OpSpec, cfg: EngineConfig, site: str,
+                       explicit: Optional[str] = None) -> List[Diagnostic]:
+    """Precision-scope findings for one op: `explicit` is the per-op
+    `precision=` override captured from the program's forward (None when
+    the op leaves precision to the config)."""
+    out: List[Diagnostic] = []
+    supported = planlib.supports_int8(op)
+    if explicit == "int8" and not supported:
+        out.append(finding(
+            "int8-unsupported-op", site,
+            f"explicit precision='int8' on {op.kind} "
+            f"{op.x_shape}x{op.w_shape} (spec {op.spec!r}) is outside the "
+            "int8 contract and raises at trace time",
+            fix="drop the per-op override or restructure the op into a "
+                "canonical GEMM / conv2d"))
+    elif explicit is None and cfg.precision == "int8" and not supported:
+        out.append(finding(
+            "int8-silent-downgrade", site,
+            f"{op.kind} {op.x_shape}x{op.w_shape} (spec {op.spec!r}) is "
+            "outside the int8 contract and silently runs fp32 under "
+            "precision='int8'",
+            fix="expected for attention/SSM-adjacent einsums; silence by "
+                "pinning precision='fp32' per op if the downgrade is "
+                "intentional"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# epilogue form
+# ---------------------------------------------------------------------------
+
+def check_epilogue(op: OpSpec, site: str, *, has_bias: bool = False,
+                   bias_len: Optional[int] = None,
+                   act: Optional[str] = None) -> List[Diagnostic]:
+    """Epilogue-legality findings for one op + epilogue descriptor.
+
+    Mirrors `api._check_epilogue` plus the einsum trailing-label rule,
+    as a pure function over shapes — usable before any array exists.
+    """
+    out: List[Diagnostic] = []
+    if act is not None and act not in dispatch.EPILOGUE_ACTS:
+        out.append(finding(
+            "epilogue-illegal-form", site,
+            f"unknown epilogue activation {act!r}; registered: "
+            f"{sorted(dispatch.EPILOGUE_ACTS)}",
+            fix="use a registered activation or apply the op unfused"))
+    if not has_bias:
+        return out
+    if op.kind == "conv2d":
+        n_out = op.w_shape[3]
+    elif op.kind == "dense":
+        st = planlib.parse_einsum(op.spec, len(op.x_shape), len(op.w_shape))
+        if not st.out_labels or st.out_labels[-1] not in st.w_free:
+            out.append(finding(
+                "epilogue-illegal-form", site,
+                f"einsum {op.spec!r}: trailing output label is not a "
+                "weight-only (w-free) dim, so a per-feature bias is "
+                "ill-defined",
+                fix="reorder the output spec to end on a w-free label, or "
+                    "add the bias unfused"))
+            return out
+        lab = st.out_labels[-1]
+        n_out = op.w_shape[st.w_labels.index(lab)]
+    else:
+        out.append(finding(
+            "epilogue-illegal-form", site,
+            f"op kind {op.kind!r} has no fused epilogue",
+            fix="apply bias/activation outside the engine call"))
+        return out
+    if bias_len is not None and bias_len != n_out:
+        out.append(finding(
+            "epilogue-illegal-form", site,
+            f"bias length {bias_len} != {n_out} output features",
+            fix=f"pass a ({n_out},) bias — one entry per output feature"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batch-invariant tuning keys
+# ---------------------------------------------------------------------------
+
+def check_batch_invariant_keys(program: Any, cfg: EngineConfig,
+                               ) -> List[Diagnostic]:
+    """Diff every op's tile key between the program's recorded batch and
+    batch+1. Programs without batch metadata are skipped (nothing ever
+    rebatches them)."""
+    out: List[Diagnostic] = []
+    if getattr(program, "batch_size", None) is None:
+        return out
+    try:
+        rebatched = program.with_batch(program.batch_size + 1)
+    except ValueError:
+        return out
+    for i, (a, b) in enumerate(zip(program.ops, rebatched.ops)):
+        for prec in ("fp32", "int8"):
+            ka = tunelib.tile_key(a, "pallas", cfg.accum, prec)
+            kb = tunelib.tile_key(b, "pallas", cfg.accum, prec)
+            if ka != kb:
+                out.append(finding(
+                    "tuning-key-batch-variant",
+                    f"{program.name}:op[{i}] {a.kind} ({a.name or 'unnamed'})",
+                    f"tile key moves with the batch at precision {prec}: "
+                    f"batch {program.batch_size} -> {ka}, batch "
+                    f"{program.batch_size + 1} -> {kb}",
+                    fix="tile keys must drop the batch/row dim (see "
+                        "tune.tile_key); fix the key derivation or the "
+                        "program's batch metadata"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# donation safety
+# ---------------------------------------------------------------------------
+
+def _leaves(tree: Any) -> List[Any]:
+    return [leaf for leaf in jax.tree_util.tree_leaves(tree)
+            if hasattr(leaf, "shape")]
+
+
+def check_donation(program: Any, donate_argnums: Sequence[int],
+                   ) -> List[Diagnostic]:
+    """Donated args must find shape/dtype-matching output leaves (XLA can
+    only alias a donated buffer into an identically-shaped output)."""
+    out: List[Diagnostic] = []
+    if not donate_argnums or getattr(program, "fn", None) is None:
+        return out
+    site = f"{program.name}:donate_argnums"
+    for i in donate_argnums:
+        if not 0 <= i < len(program.in_avals):
+            out.append(finding(
+                "donation-hazard", site,
+                f"donate_argnums index {i} out of range for "
+                f"{len(program.in_avals)} program args",
+                fix="donate only real argument positions"))
+    try:
+        result = jax.eval_shape(program.fn, *program.in_avals)
+    except Exception as e:          # surfaced by program-capture-failed
+        out.append(finding("program-capture-failed", site,
+                           f"shape-trace failed while checking donation: "
+                           f"{type(e).__name__}: {e}"))
+        return out
+    out_leaves = _leaves(result)
+    out_sigs = {(tuple(leaf.shape), jax.numpy.dtype(leaf.dtype))
+                for leaf in out_leaves}
+    for i in donate_argnums:
+        if not 0 <= i < len(program.in_avals):
+            continue
+        for leaf in _leaves(program.in_avals[i]):
+            sig = (tuple(leaf.shape), jax.numpy.dtype(leaf.dtype))
+            if sig not in out_sigs:
+                out.append(finding(
+                    "donation-hazard", f"{program.name}:arg[{i}]",
+                    f"donated leaf {sig[0]}/{sig[1]} has no shape/dtype-"
+                    "matching output to reuse its buffer — the donated "
+                    "buffer is deleted and a second call on it crashes",
+                    fix="donate only threaded state the program returns "
+                        "(the paged-KV pool pattern), never reused "
+                        "weights"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fallback-chain parity
+# ---------------------------------------------------------------------------
+
+_PINNED_PARITY: Tuple[str, ...] = ("pallas", "xla", "ref")
+
+
+def check_fallback_chain(cfg: EngineConfig, site: str) -> List[Diagnostic]:
+    """`fallback="chain"` over a backend without pinned bitwise parity has
+    no safe hops: the degradation table only covers the built-ins."""
+    out: List[Diagnostic] = []
+    if cfg.fallback != "chain":
+        return out
+    if cfg.backend not in _PINNED_PARITY \
+            or cfg.backend not in dispatch.DEGRADATION:
+        out.append(finding(
+            "fallback-chain-unpinned", site,
+            f"fallback='chain' configured over backend {cfg.backend!r}, "
+            "which has no pinned bitwise-parity chain (DEGRADATION covers "
+            f"{sorted(dispatch.DEGRADATION)})",
+            fix="use a built-in backend under the chain, or register the "
+                "backend in dispatch.DEGRADATION once its parity is "
+                "pinned by tests"))
+    return out

@@ -1,0 +1,80 @@
+"""Sharding contract rules (layer 1).
+
+The PR-7 parallel engine established three contracts that are decidable
+from shapes and configs alone, before any mesh exists:
+
+  * a forced shard strategy must actually be executable — the split dim
+    has to divide evenly by the model-axis extent, because
+    `parallel.decide` silently falls back to replicate otherwise (the
+    ragged split would break the fixed-tile batch-invariance contract);
+  * shard-K is the repo's *sole* allclose-only carve-out: with
+    `exact_only=True` the "auto" policy must never attach it, and any
+    attached shard-K decision outside an explicit `policy="shard_k"`
+    opt-in is a breach of the bitwise parity contract;
+  * an explicit shard-K opt-in is legal but noteworthy — the verifier
+    records it as an info finding so a config review sees the carve-out.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.engine import parallel as parlib
+from repro.engine.plan import EnginePlan, OpSpec
+
+from repro.analyze.diagnostics import Diagnostic, Rule, finding, register_rule
+
+register_rule(Rule(
+    id="shard-indivisible", severity="error", layer="shard",
+    contract="a forced shard_k/shard_n strategy must divide its split dim "
+             "evenly by the model-axis extent; an indivisible dim silently "
+             "replicates, defeating the requested parallelism"))
+register_rule(Rule(
+    id="shard-exact-breach", severity="error", layer="shard",
+    contract="shard-K (allclose-only) must never be attached under "
+             "exact_only=True unless policy='shard_k' explicitly opted out "
+             "of the bitwise parity contract"))
+register_rule(Rule(
+    id="shard-inexact-optin", severity="info", layer="shard",
+    contract="policy='shard_k' trades the bitwise parity contract for "
+             "throughput (the repo's sole allclose carve-out) — recorded "
+             "so config reviews see the opt-out"))
+
+
+def check_op_shard(op: OpSpec, plan: EnginePlan,
+                   pcfg: Optional[parlib.ParallelConfig],
+                   site: str) -> List[Diagnostic]:
+    """Shard-contract findings for one planned op under `pcfg`."""
+    out: List[Diagnostic] = []
+    if pcfg is None or pcfg.model <= 1:
+        return out
+    gemm = parlib._gemm_dims(op)
+    if pcfg.policy in ("shard_k", "shard_n") and gemm is not None:
+        _, _, k, n = gemm
+        dim_name, dim = (("K", k) if pcfg.policy == "shard_k" else ("N", n))
+        if dim % pcfg.model != 0:
+            out.append(finding(
+                "shard-indivisible", site,
+                f"policy={pcfg.policy!r} cannot split {dim_name}={dim} "
+                f"over model={pcfg.model} devices ({dim} % {pcfg.model} "
+                "!= 0); parallel.decide will silently replicate this op",
+                fix=f"pad {dim_name} to a multiple of {pcfg.model}, shrink "
+                    "the model axis, or set policy='replicate'/'auto' for "
+                    "an honest placement"))
+    sd = plan.shard
+    if sd is not None and sd.strategy == "shard_k" \
+            and pcfg.exact_only and pcfg.policy != "shard_k":
+        out.append(finding(
+            "shard-exact-breach", site,
+            "a shard-K decision is attached under exact_only=True without "
+            "the explicit policy='shard_k' opt-in — all-reduced fp32 "
+            "partial sums break the bitwise parity contract",
+            fix="set policy='shard_k' to opt out explicitly, or drop the "
+                "shard-K decision"))
+    if pcfg.policy == "shard_k":
+        if gemm is not None and gemm[2] % pcfg.model == 0:
+            out.append(finding(
+                "shard-inexact-optin", site,
+                f"op runs under the shard-K allclose carve-out "
+                f"(K={gemm[2]} split {pcfg.model} ways; outputs are "
+                "allclose, not bitwise, vs single-device)"))
+    return out

@@ -1,0 +1,81 @@
+"""Layer-1 orchestrator: verify a Program x EngineConfig pair statically.
+
+`verify_program` runs every plan/tile/shard rule over one program under one
+config — pure functions over shapes, configs and the `.tuning/` cache, no
+arrays, no dispatch. `engine.compile(verify="warn"|"error")` calls it
+before building the `CompiledNet`; `python -m repro.analyze` sweeps it over
+every registered program x a config matrix.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.engine import parallel as parlib
+from repro.engine import program as proglib
+from repro.engine.config import EngineConfig
+from repro.engine.plan import OpSpec, plan_op, with_precision
+
+from repro.analyze import rules_plan, rules_shard, rules_tile
+from repro.analyze.diagnostics import Report, finding
+
+
+def _site(program_name: str, i: int, op: OpSpec) -> str:
+    label = f" ({op.name})" if op.name else ""
+    return f"{program_name}:op[{i}] {op.kind}{label}"
+
+
+def _captured_pairs(program: Any, report: Report,
+                    ) -> List[Tuple[OpSpec, Optional[str]]]:
+    """The executed (op, explicit-precision) sequence captured from the
+    program's forward — the same capture `engine.compile` pins exec pairs
+    from. Analytic-only programs return their op table with no overrides;
+    a capture failure is reported and degrades to the same."""
+    if getattr(program, "fn", None) is None:
+        return [(op, None) for op in program.ops]
+    try:
+        ops, precs = proglib._capture_ops(program.fn, program.in_avals)
+    except Exception as e:
+        report.add(finding(
+            "program-capture-failed", f"{program.name}:capture",
+            f"shape-trace of the program forward raised "
+            f"{type(e).__name__}: {e}",
+            fix="the program cannot compile; fix the forward or its "
+                "recorded avals"))
+        return [(op, None) for op in program.ops]
+    return list(zip(ops, precs))
+
+
+def verify_config(cfg: EngineConfig, site: str = "config") -> Report:
+    """Config-only contracts (no program needed)."""
+    report = Report()
+    report.extend(rules_plan.check_fallback_chain(cfg, site))
+    return report
+
+
+def verify_program(program: Any, cfg: Optional[EngineConfig] = None, *,
+                   donate_argnums: Sequence[int] = ()) -> Report:
+    """Every layer-1 contract over `program` under `cfg`.
+
+    Static by construction: the *executed* op sequence is captured exactly
+    as `engine.compile` captures it (same `_capture_ops` / precision
+    pinning / shard attachment), then every plan is audited — nothing
+    executes, no tile is benchmarked, no mesh is built.
+    """
+    cfg = EngineConfig() if cfg is None else cfg
+    report = verify_config(cfg, site=f"{program.name}:config")
+    pcfg = cfg.parallel
+
+    for i, (op, explicit) in enumerate(_captured_pairs(program, report)):
+        site = _site(program.name, i, op)
+        backend = proglib._select_backend(op, cfg)
+        plan = with_precision(plan_op(op, backend), op,
+                              explicit or cfg.precision)
+        plan = parlib.attach(op, plan, pcfg)
+        report.extend(rules_plan.check_op_precision(op, cfg, site,
+                                                    explicit=explicit))
+        report.extend(rules_tile.check_op_tile(op, plan, cfg, site))
+        report.extend(rules_shard.check_op_shard(op, plan, pcfg, site))
+
+    report.extend(rules_plan.check_batch_invariant_keys(program, cfg))
+    report.extend(rules_plan.check_donation(program, donate_argnums))
+    return report

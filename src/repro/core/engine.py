@@ -109,13 +109,17 @@ class MultiModeEngine:
         return self.ledger.report()
 
 
-_DEFAULT: Optional[MultiModeEngine] = None
+_DEFAULT: Optional[MultiModeEngine] = None  # analyze: allow[mutable-global] deprecated singleton shim
 
 
 def default_engine() -> MultiModeEngine:
     """Deprecated process-wide engine (analytics off). Prefer the ambient
     `engine.using_backend(...)` / plain `engine.dense` calls."""
     global _DEFAULT
+    warnings.warn(
+        "default_engine() is deprecated; use the functional repro.engine "
+        "API (ambient config via engine.using_backend/using_config)",
+        DeprecationWarning, stacklevel=2)
     if _DEFAULT is None:
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)

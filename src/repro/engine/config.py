@@ -25,6 +25,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import warnings
 from typing import Iterator, List, Optional
 
 from repro.engine.parallel import ParallelConfig
@@ -156,7 +157,7 @@ class EngineConfig:
 
 
 # Process-wide base config (bottom of every thread's resolution order).
-_BASE: List[EngineConfig] = [EngineConfig()]
+_BASE: List[EngineConfig] = [EngineConfig()]  # analyze: allow[mutable-global] the sanctioned base slot under _TLS
 
 
 class _Stack(threading.local):
@@ -224,6 +225,10 @@ def set_default_config(cfg: EngineConfig) -> None:
 
 
 def set_default_backend(name: str) -> None:
+    warnings.warn(
+        "set_default_backend() is deprecated; use using_backend(name) for "
+        "scoped selection or set_default_config() for the process base",
+        DeprecationWarning, stacklevel=2)
     from repro.engine import dispatch
     dispatch.get_backend(name)              # validate eagerly
     _require_no_context("set_default_backend()")
@@ -232,5 +237,9 @@ def set_default_backend(name: str) -> None:
 
 def set_interpret(interpret: bool) -> None:
     """Whether Pallas kernels run in interpret mode (True on CPU)."""
+    warnings.warn(
+        "set_interpret() is deprecated; use using_config(current_config()"
+        ".replace(interpret=...)) or set_default_config()",
+        DeprecationWarning, stacklevel=2)
     _require_no_context("set_interpret()")
     _BASE[0] = _BASE[0].replace(interpret=bool(interpret))

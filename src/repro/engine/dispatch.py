@@ -72,7 +72,7 @@ class EngineBackend:
     gather: Optional[Callable[..., jax.Array]] = None
 
 
-_REGISTRY: Dict[str, EngineBackend] = {}
+_REGISTRY: Dict[str, EngineBackend] = {}  # analyze: allow[mutable-global] backend registry, write-once per name
 
 
 def register_backend(backend: EngineBackend, *, overwrite: bool = False) -> None:

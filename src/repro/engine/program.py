@@ -27,6 +27,7 @@ so a compiled network and an eager call see the exact same planning logic.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -510,7 +511,7 @@ class CompiledNet:
 def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
             cfg: Optional[EngineConfig] = None, *,
             donate_argnums: Tuple[int, ...] = (),
-            mesh=None) -> CompiledNet:
+            mesh=None, verify: str = "off") -> CompiledNet:
     """Two-phase entry point: plan the whole network under `cfg`, return a
     `CompiledNet` with the analytic `NetworkPlan` and a jitted `.apply`.
 
@@ -535,8 +536,25 @@ def compile(program: Program,  # noqa: A001 (mirrors engine.compile API)
     `parallel.make_mesh(cfg.parallel)` — and every exec op carries its
     pinned `ShardDecision`. Passing `mesh` without `cfg.parallel` is an
     error: the mesh alone does not say how to split ops.
+
+    `verify` gates the static contract verifier (`repro.analyze`) over
+    the (program, cfg, donate_argnums) triple before anything is built:
+    `"off"` (default) skips it entirely — zero overhead; `"warn"` emits
+    one `AnalyzeWarning` per finding; `"error"` raises `AnalyzeError`
+    when any error-severity contract violation is found.
     """
     cfg = current_config() if cfg is None else cfg
+    if verify not in ("off", "warn", "error"):
+        raise ValueError(f"verify must be 'off', 'warn' or 'error'; "
+                         f"got {verify!r}")
+    if verify != "off":
+        # imported lazily: analyze depends on this module
+        from repro.analyze import AnalyzeError, AnalyzeWarning, verify_program
+        report = verify_program(program, cfg, donate_argnums=donate_argnums)
+        if verify == "error" and not report.ok:
+            raise AnalyzeError(report)
+        for d in report:
+            warnings.warn(f"{d}", AnalyzeWarning, stacklevel=2)
     pcfg = cfg.parallel
     if mesh is not None and pcfg is None:
         raise ValueError(

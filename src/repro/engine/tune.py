@@ -74,8 +74,8 @@ def _default_dir() -> Path:
     return Path(".tuning")
 
 
-_dir_override: Optional[Path] = None
-_MEMO: Dict[str, dict] = {}     # device_kind -> loaded cache (entries live)
+_dir_override: Optional[Path] = None  # analyze: allow[mutable-global] test-only cache-dir override
+_MEMO: Dict[str, dict] = {}  # device_kind -> cache # analyze: allow[mutable-global] read-through memo
 
 
 # ---------------------------------------------------------------------------

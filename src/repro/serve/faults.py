@@ -203,7 +203,7 @@ class FaultInjector:
 # Activation: one process-wide slot, read by every hook site
 # ---------------------------------------------------------------------------
 
-_ACTIVE: Optional[FaultInjector] = None
+_ACTIVE: Optional[FaultInjector] = None  # analyze: allow[mutable-global] deliberately process-global (chaos hooks)
 
 
 def active() -> Optional[FaultInjector]:
